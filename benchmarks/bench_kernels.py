@@ -1,0 +1,49 @@
+"""Kernel microbenchmarks.
+
+On this CPU container the Pallas kernels run in interpret mode (correctness
+only) — wall-time numbers are reported for the XLA-fused reference paths the
+kernels replace, which are what a CPU deployment executes.  The Pallas TPU
+timings are a hardware deliverable; the roofline (benchmarks/roofline.py)
+provides the structural estimates instead."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+from benchmarks.common import emit, time_us
+
+
+def run():
+    rng = np.random.default_rng(0)
+    # deCSVM fused local update (paper hot-spot) — XLA-fused ref
+    for (n, p) in [(1000, 500), (5000, 2000)]:
+        X = jnp.asarray(rng.standard_normal((n, p)), jnp.float32)
+        y = jnp.asarray(rng.choice([-1., 1.], n), jnp.float32)
+        b = jnp.asarray(rng.standard_normal(p) * 0.1, jnp.float32)
+        pd = jnp.zeros(p)
+        ng = jnp.zeros(p)
+        fn = jax.jit(lambda *a: ref.decsvm_local_update(
+            *a, 2.0, 0.1, 0.05, 0.25, "epanechnikov"))
+        us = time_us(fn, X, y, b, pd, ng, reps=10)
+        bytes_moved = 2 * n * p * 4
+        emit(f"kernel/csvm_update/n{n}_p{p}", us,
+             f"GBps={bytes_moved/us*1e-3:.2f};interpret_validated=1")
+    # attention — XLA chunked path (the kernel's lowering twin)
+    from repro.models.attention import _attend
+    for (B, H, S, D) in [(1, 8, 512, 64), (2, 8, 1024, 64)]:
+        q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((B, S, 2, D)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((B, S, 2, D)), jnp.float32)
+        pos = jnp.arange(S)
+        fn = jax.jit(lambda q, k, v: _attend(q, k, v, pos, pos, causal=True,
+                                             window=None))
+        us = time_us(fn, q, k, v, reps=5)
+        flops = 4 * B * H * S * S * D
+        emit(f"kernel/attention/B{B}_S{S}", us,
+             f"GFLOPs={flops/us*1e-3:.1f};interpret_validated=1")
+
+
+if __name__ == "__main__":
+    run()

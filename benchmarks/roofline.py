@@ -1,0 +1,91 @@
+"""Roofline analysis (deliverable g): read results/dryrun/*.json and emit the
+per-(arch x shape x mesh) three-term roofline table, bottleneck, 6ND
+model-flops ratio and a one-line "what to move next" hint.
+
+Usage:  PYTHONPATH=src python -m benchmarks.roofline [--dir results/dryrun]
+        [--markdown]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+HINTS = {
+    "compute_s": "compute-bound: increase per-chip batch or quantize; near "
+                 "roofline only if useful-ratio ~1",
+    "memory_s": "memory-bound: raise arithmetic intensity (fuse ops, bigger "
+                "tiles, bf16 activations, ring KV cache)",
+    "collective_s": "collective-bound: reshard to cut all-gathers (vocab/"
+                    "seq-sharded activations), overlap collectives with "
+                    "compute, or move traffic to reduce-scatter",
+}
+
+
+def load(dirpath: str):
+    recs = []
+    for f in sorted(glob.glob(f"{dirpath}/*.json")):
+        r = json.loads(Path(f).read_text())
+        if r.get("ok"):
+            recs.append(r)
+    return recs
+
+
+def rows(recs):
+    out = []
+    for r in recs:
+        rf = r["roofline"]
+        out.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "compute_s": rf["compute_s"], "memory_s": rf["memory_s"],
+            "collective_s": rf["collective_s"], "dominant": rf["dominant"],
+            "useful_ratio": rf["useful_flops_ratio"],
+            "temp_gb": (r["memory_analysis"]["temp_bytes"] or 0) / 1e9,
+            "compile_s": r["compile_s"],
+        })
+    return out
+
+
+def run(dirpath: str = "results/dryrun", markdown: bool = False):
+    recs = load(dirpath)
+    table = rows(recs)
+    if markdown:
+        print("| arch | shape | mesh | compute(s) | memory(s) | collective(s)"
+              " | dominant | 6ND/HLO | temp GB |")
+        print("|---|---|---|---|---|---|---|---|---|")
+        for t in sorted(table, key=lambda t: (t["arch"], t["shape"],
+                                              t["mesh"])):
+            print(f"| {t['arch']} | {t['shape']} | {t['mesh']} "
+                  f"| {t['compute_s']:.2e} | {t['memory_s']:.2e} "
+                  f"| {t['collective_s']:.2e} | {t['dominant'][:-2]} "
+                  f"| {t['useful_ratio']:.2f} | {t['temp_gb']:.1f} |")
+    else:
+        for t in table:
+            emit(f"roofline/{t['arch']}/{t['shape']}/{t['mesh']}", 0.0,
+                 f"compute={t['compute_s']:.3e};memory={t['memory_s']:.3e};"
+                 f"collective={t['collective_s']:.3e};"
+                 f"dominant={t['dominant']};useful={t['useful_ratio']:.3f}")
+    # summary: worst fraction + most collective-bound (hillclimb candidates)
+    singles = [t for t in table if t["mesh"] == "single"]
+    if singles:
+        def frac(t):
+            dom = max(t["compute_s"], t["memory_s"], t["collective_s"])
+            return t["compute_s"] / dom if dom else 0.0
+        worst = min(singles, key=frac)
+        coll = max(singles, key=lambda t: t["collective_s"]
+                   / max(t["compute_s"] + t["memory_s"], 1e-12))
+        emit("roofline/summary", 0.0,
+             f"worst_compute_fraction={worst['arch']}x{worst['shape']};"
+             f"most_collective_bound={coll['arch']}x{coll['shape']}")
+    return table
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--markdown", action="store_true")
+    a = ap.parse_args()
+    run(a.dir, a.markdown)

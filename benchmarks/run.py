@@ -1,0 +1,29 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    from benchmarks import (bench_flips, bench_iterations, bench_kernels,
+                            bench_realworld, bench_sample_size, bench_theory,
+                            bench_topology, roofline)
+    bench_iterations.run()       # paper Figure 1
+    bench_sample_size.run()      # paper Tables 1-2
+    bench_topology.run()         # paper Tables 3-4
+    bench_flips.run()            # paper Table 5
+    bench_realworld.run()        # paper Table 6 (offline analogue)
+    bench_theory.run()           # Theorems 1 & 2 direct checks
+    bench_kernels.run()          # Pallas hot-spot microbench
+    try:
+        roofline.run()           # deliverable (g), from dry-run JSONs
+    except Exception as e:  # noqa: BLE001 — dry-run results may be absent
+        print(f"roofline/skipped,0.0,reason={e!r}", file=sys.stderr)
+    print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,36 @@
+"""End-to-end driver: train a ~100M-parameter qwen3-family model for a few
+hundred steps on synthetic bigram data (CPU).  Loss decreases from ~ln(V)
+toward the bigram entropy floor.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+import argparse
+import dataclasses
+
+import repro.configs as configs
+from repro.launch.train import train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+    # ~100M-param family member: qwen3 block, 8 layers, d=768
+    cfg = dataclasses.replace(
+        configs.get("qwen3-14b"),
+        name="qwen3-100m", num_layers=8, d_model=768, num_heads=12,
+        num_kv_heads=4, head_dim=64, d_ff=2048, vocab_size=8192,
+        param_dtype="float32")
+    params, losses = train_loop(cfg, steps=args.steps, batch=args.batch,
+                                seq=args.seq, lr=1e-3, log_every=20)
+    first = sum(losses[:10]) / 10
+    last = sum(losses[-10:]) / 10
+    print(f"\nmean loss first10={first:.3f} last10={last:.3f} "
+          f"(improvement {first - last:.3f} nats)")
+    assert last < first, "training must reduce loss"
+
+
+if __name__ == "__main__":
+    main()

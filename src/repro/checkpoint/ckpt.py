@@ -1,0 +1,62 @@
+"""Sharding-aware checkpointing: numpy .npz payload + json manifest.
+
+Arrays are gathered to host (``jax.device_get`` handles sharded arrays),
+keyed by their pytree path; restore rebuilds the pytree and (optionally)
+re-places leaves with a target sharding tree.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any):
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in leaves:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        out[key] = leaf
+    return out
+
+
+def save_checkpoint(path: str | Path, tree: Any, step: int = 0) -> None:
+    path = Path(path)
+    path.mkdir(parents=True, exist_ok=True)
+    flat = _flatten(tree)
+    arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+    np.savez(path / "arrays.npz", **arrays)
+    manifest = {
+        "step": step,
+        "keys": {k: {"shape": list(a.shape), "dtype": str(a.dtype)}
+                 for k, a in arrays.items()},
+    }
+    (path / "manifest.json").write_text(json.dumps(manifest, indent=1))
+
+
+def restore_checkpoint(path: str | Path, like: Any,
+                       shardings: Optional[Any] = None) -> tuple[Any, int]:
+    """Restore into the structure of ``like`` (a pytree of arrays/structs)."""
+    path = Path(path)
+    manifest = json.loads((path / "manifest.json").read_text())
+    data = np.load(path / "arrays.npz")
+    flat_like = _flatten(like)
+    missing = set(flat_like) - set(data.files)
+    if missing:
+        raise ValueError(f"checkpoint missing keys: {sorted(missing)[:5]} ...")
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    paths = [p for p, _ in jax.tree_util.tree_flatten_with_path(like)[0]]
+    new_leaves = []
+    for path_keys, leaf in zip(paths, leaves_like):
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path_keys)
+        arr = data[key]
+        new_leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    tree = jax.tree_util.tree_unflatten(treedef, new_leaves)
+    if shardings is not None:
+        tree = jax.device_put(tree, shardings)
+    return tree, int(manifest["step"])

@@ -1,0 +1,22 @@
+"""qwen3-14b [dense]: 40L d_model=5120 40H (GQA kv=8) d_ff=17408
+vocab=151936 — qk_norm, GQA.  [hf:Qwen/Qwen3-8B family]"""
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-14b", arch_type="dense",
+        num_layers=40, d_model=5120, num_heads=40, num_kv_heads=8,
+        head_dim=128, d_ff=17408, vocab_size=151936,
+        norm="rmsnorm", qk_norm=True, rope_theta=1e6, mlp_act="swiglu",
+        param_dtype="bfloat16",
+    )
+
+
+def reduced() -> ModelConfig:
+    return dataclasses.replace(
+        config(), name="qwen3-14b-reduced", num_layers=2, d_model=256,
+        num_heads=4, num_kv_heads=2, head_dim=64, d_ff=512, vocab_size=512,
+        param_dtype="float32")

@@ -1,0 +1,19 @@
+"""deCSVM core: the paper's contribution as a composable JAX module."""
+from repro.core.admm import (ADMMConfig, decsvm_fit, soft_threshold,
+                             compute_rho, objective, hard_threshold_final)
+from repro.core.losses import (smoothed_hinge_loss, smoothed_hinge_grad,
+                               get_kernel, hinge, KERNELS, default_bandwidth)
+from repro.core.simulate import SimConfig, generate, true_beta
+from repro.core import (baselines, gossip, graph, metrics, penalties,
+                        tuning)
+from repro.core.admm_adaptive import decsvm_fit_tol, decsvm_fit_uneven
+from repro.core.penalties import decsvm_fit_lla
+
+__all__ = [
+    "ADMMConfig", "decsvm_fit", "soft_threshold", "compute_rho", "objective",
+    "hard_threshold_final", "smoothed_hinge_loss", "smoothed_hinge_grad",
+    "get_kernel", "hinge", "KERNELS", "default_bandwidth", "SimConfig",
+    "generate", "true_beta", "graph", "metrics", "tuning", "baselines",
+    "gossip", "penalties", "decsvm_fit_tol", "decsvm_fit_uneven",
+    "decsvm_fit_lla",
+]

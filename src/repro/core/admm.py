@@ -1,0 +1,156 @@
+"""Generalized decentralized ADMM for the penalized convoluted SVM
+(paper Algorithm 1, updates (7a') and (7b)).
+
+This is the dense single-process engine: node states are stacked into
+B (m, p) / P (m, p) and the per-node update is vmapped; the one-hop
+neighbour sum is the matmul W @ B.  ``repro.core.decentral`` provides the
+shard_map multi-device engine with identical semantics (tested to agree).
+
+Update (per node l, with deg_l = |N(l)|):
+    grad_l = (1/n) sum_i L_h'(y_i x_i' b_l) y_i x_i
+    z_l    = rho_l b_l - grad_l - p_l + tau * (deg_l * b_l + (W B)_l)
+    b+_l   = S_{lam * w_l}( w_l * z_l ),   w_l = 1/(2 tau deg_l + rho_l + lam0)
+    p+_l   = p_l + tau * (deg_l * b+_l - (W B+)_l)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import losses
+
+Array = jax.Array
+
+
+def soft_threshold(v: Array, t) -> Array:
+    """Coordinate-wise soft-thresholding S_t(v)."""
+    return jnp.sign(v) * jnp.maximum(jnp.abs(v) - t, 0.0)
+
+
+def power_iteration_lmax(X: Array, iters: int = 50) -> Array:
+    """Largest eigenvalue of X'X/n, matrix-free (X: (n, p))."""
+    n = X.shape[0]
+    v = jnp.full((X.shape[1],), 1.0 / jnp.sqrt(X.shape[1]), X.dtype)
+
+    def body(v, _):
+        w = X.T @ (X @ v) / n
+        return w / (jnp.linalg.norm(w) + 1e-30), None
+
+    v, _ = jax.lax.scan(body, v, None, length=iters)
+    w = X.T @ (X @ v) / n
+    return jnp.vdot(v, w) / (jnp.vdot(v, v) + 1e-30)
+
+
+@dataclasses.dataclass(frozen=True)
+class ADMMConfig:
+    lam: float = 0.05          # l1 penalty
+    lam0: float = 0.0          # l2 (elastic net) penalty; 0 => pure l1
+    tau: float = 1.0           # ADMM penalty parameter
+    h: float = 0.25            # smoothing bandwidth
+    kernel: str = "epanechnikov"
+    max_iter: int = 300
+    rho_safety: float = 1.05   # multiply the c_h * lmax bound by this
+    use_pallas: bool = False   # route the local update through the TPU kernel
+
+
+class ADMMState(NamedTuple):
+    B: Array      # (m, p) primal node estimates
+    P: Array      # (m, p) accumulated duals  p_l = sum_k (u_lk + v_lk)
+    t: Array      # iteration counter
+
+
+def compute_rho(X: Array, h: float, kernel: str, safety: float = 1.05) -> Array:
+    """rho_l >= c_h * Lmax(X_l'X_l/n) per node.  X: (m, n, p)."""
+    c_h = losses.get_kernel(kernel).lipschitz(h)
+    lmax = jax.vmap(power_iteration_lmax)(X)
+    return safety * c_h * lmax
+
+
+def local_gradient(X: Array, y: Array, beta: Array, h: float, kernel: str) -> Array:
+    """(1/n) X' (L_h'(y * X b) * y)   for a single node.  X:(n,p) y:(n,)."""
+    margin = y * (X @ beta)
+    w = losses.get_kernel(kernel).dloss(margin, h) * y
+    return X.T @ w / X.shape[0]
+
+
+def admm_step(X: Array, y: Array, W: Array, deg: Array, rho: Array,
+              state: ADMMState, cfg: ADMMConfig,
+              lam_weights: Optional[Array] = None) -> ADMMState:
+    """One round of Algorithm 1 across all m nodes.
+
+    lam_weights: optional (p,) per-coordinate multiplier of the l1 level —
+    the hook for adaptive/SCAD/MCP penalties via one-step LLA
+    (repro.core.penalties).
+    """
+    B, P, t = state
+    lam_vec = (cfg.lam if lam_weights is None
+               else cfg.lam * lam_weights[None, :])
+    neigh = W @ B                                   # (WB)_l = sum_{k in N(l)} b_k
+    omega = 1.0 / (2.0 * cfg.tau * deg + rho + cfg.lam0)   # (m,)
+    if cfg.use_pallas and lam_weights is None:
+        from repro.kernels import ops  # lazy: kernels dep is optional here
+        neigh_term = cfg.tau * (deg[:, None] * B + neigh)
+        B_new = jax.vmap(
+            lambda Xl, yl, bl, pl_, nl, rl, wl: ops.csvm_local_update(
+                Xl, yl, bl, pl_, nl, rl, wl, cfg.lam, h=cfg.h,
+                kernel=cfg.kernel)
+        )(X, y, B, P, neigh_term, rho, omega)
+    else:
+        grads = jax.vmap(local_gradient, in_axes=(0, 0, 0, None, None))(
+            X, y, B, cfg.h, cfg.kernel)
+        z = (rho[:, None] * B - grads - P
+             + cfg.tau * (deg[:, None] * B + neigh))
+        B_new = soft_threshold(omega[:, None] * z, lam_vec * omega[:, None])
+    P_new = P + cfg.tau * (deg[:, None] * B_new - W @ B_new)
+    return ADMMState(B_new, P_new, t + 1)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "track_history"))
+def decsvm_fit(X: Array, y: Array, W: Array, cfg: ADMMConfig,
+               beta0: Optional[Array] = None,
+               track_history: bool = False,
+               lam_weights: Optional[Array] = None):
+    """Run Algorithm 1 for cfg.max_iter rounds.
+
+    Args:
+      X: (m, n, p) node-partitioned design (intercept included as a column).
+      y: (m, n) labels in {-1, +1}.
+      W: (m, m) adjacency.
+      beta0: optional (m, p) warm start (A7 allows zeros).
+      lam_weights: optional (p,) per-coordinate l1 multipliers (LLA stage 2).
+    Returns:
+      B: (m, p) final node estimates; and, if track_history, H: (T, m, p).
+    """
+    m, _, p = X.shape
+    deg = jnp.sum(W, axis=1)
+    rho = compute_rho(X, cfg.h, cfg.kernel, cfg.rho_safety)
+    B0 = jnp.zeros((m, p), X.dtype) if beta0 is None else beta0
+    state = ADMMState(B0, jnp.zeros((m, p), X.dtype), jnp.zeros((), jnp.int32))
+
+    def body(state, _):
+        new = admm_step(X, y, W, deg, rho, state, cfg,
+                        lam_weights=lam_weights)
+        return new, (new.B if track_history else None)
+
+    final, hist = jax.lax.scan(body, state, None, length=cfg.max_iter)
+    if track_history:
+        return final.B, hist
+    return final.B
+
+
+def objective(X: Array, y: Array, beta: Array, cfg: ADMMConfig) -> Array:
+    """Network-wide smoothed elastic-net objective (eq. 3/4) at a common beta."""
+    k = losses.get_kernel(cfg.kernel)
+    margins = y * jnp.einsum("mnp,p->mn", X, beta)
+    data = jnp.mean(k.loss(margins, cfg.h))
+    return data + 0.5 * cfg.lam0 * jnp.sum(beta**2) + cfg.lam * jnp.sum(jnp.abs(beta))
+
+
+def hard_threshold_final(B: Array, lam: float) -> Array:
+    """Theorem 4 post-processing: beta_hat = S_lambda(beta_{t+1})."""
+    return soft_threshold(B, lam)

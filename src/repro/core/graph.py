@@ -1,0 +1,133 @@
+"""Decentralized network topologies (paper Section 2.1).
+
+A network is an undirected connected graph over m nodes, encoded by a binary
+adjacency matrix W with zero diagonal (no self-loops, Assumption A1).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _check(W: np.ndarray) -> np.ndarray:
+    W = np.asarray(W)
+    assert W.ndim == 2 and W.shape[0] == W.shape[1], "W must be square"
+    assert np.array_equal(W, W.T), "W must be symmetric"
+    assert np.all(np.diag(W) == 0), "no self-loops (A1)"
+    return W.astype(np.float32)
+
+
+def is_connected(W: np.ndarray) -> bool:
+    """BFS reachability check (Assumption A1)."""
+    m = W.shape[0]
+    seen = np.zeros(m, dtype=bool)
+    stack = [0]
+    seen[0] = True
+    while stack:
+        u = stack.pop()
+        for v in np.nonzero(W[u])[0]:
+            if not seen[v]:
+                seen[v] = True
+                stack.append(int(v))
+    return bool(seen.all())
+
+
+def erdos_renyi(m: int, p_connect: float, seed: int = 0,
+                max_tries: int = 1000) -> np.ndarray:
+    """Connected Erdős–Rényi graph G(m, p_c) — resamples until connected."""
+    rng = np.random.default_rng(seed)
+    for _ in range(max_tries):
+        upper = rng.random((m, m)) < p_connect
+        W = np.triu(upper, 1)
+        W = (W | W.T).astype(np.float32)
+        if is_connected(W):
+            return _check(W)
+    raise RuntimeError(f"could not sample a connected G({m},{p_connect})")
+
+
+def ring(m: int) -> np.ndarray:
+    W = np.zeros((m, m), dtype=np.float32)
+    for i in range(m):
+        W[i, (i + 1) % m] = W[(i + 1) % m, i] = 1.0
+    if m == 2:  # avoid double edge
+        W = np.minimum(W, 1.0)
+    return _check(W)
+
+
+def star(m: int) -> np.ndarray:
+    W = np.zeros((m, m), dtype=np.float32)
+    W[0, 1:] = W[1:, 0] = 1.0
+    return _check(W)
+
+
+def complete(m: int) -> np.ndarray:
+    W = np.ones((m, m), dtype=np.float32) - np.eye(m, dtype=np.float32)
+    return _check(W)
+
+
+def grid2d(rows: int, cols: int) -> np.ndarray:
+    """2-D torus-free grid — the natural embedding on a TPU mesh slice."""
+    m = rows * cols
+    W = np.zeros((m, m), dtype=np.float32)
+    for r in range(rows):
+        for c in range(cols):
+            i = r * cols + c
+            if c + 1 < cols:
+                W[i, i + 1] = W[i + 1, i] = 1.0
+            if r + 1 < rows:
+                W[i, i + cols] = W[i + cols, i] = 1.0
+    return _check(W)
+
+
+def torus2d(rows: int, cols: int) -> np.ndarray:
+    """2-D torus — matches TPU ICI wrap-around links."""
+    m = rows * cols
+    W = np.zeros((m, m), dtype=np.float32)
+    for r in range(rows):
+        for c in range(cols):
+            i = r * cols + c
+            j_right = r * cols + (c + 1) % cols
+            j_down = ((r + 1) % rows) * cols + c
+            if j_right != i:
+                W[i, j_right] = W[j_right, i] = 1.0
+            if j_down != i:
+                W[i, j_down] = W[j_down, i] = 1.0
+    return _check(W)
+
+
+def make_graph(kind: str, m: int, p_connect: float = 0.5, seed: int = 0) -> np.ndarray:
+    if kind == "erdos_renyi":
+        return erdos_renyi(m, p_connect, seed)
+    if kind == "ring":
+        return ring(m)
+    if kind == "star":
+        return star(m)
+    if kind == "complete":
+        return complete(m)
+    if kind == "grid":
+        r = int(np.floor(np.sqrt(m)))
+        while m % r:
+            r -= 1
+        return grid2d(r, m // r)
+    if kind == "torus":
+        r = int(np.floor(np.sqrt(m)))
+        while m % r:
+            r -= 1
+        return torus2d(r, m // r)
+    raise ValueError(f"unknown graph kind {kind!r}")
+
+
+def degrees(W: np.ndarray) -> np.ndarray:
+    return W.sum(axis=1)
+
+
+def metropolis_weights(W: np.ndarray) -> np.ndarray:
+    """Doubly-stochastic Metropolis–Hastings mixing matrix (used by the
+    average-consensus and D-subGD baselines, Yadav & Salapaka 2007)."""
+    m = W.shape[0]
+    deg = degrees(W)
+    M = np.zeros_like(W, dtype=np.float64)
+    for i in range(m):
+        for j in np.nonzero(W[i])[0]:
+            M[i, j] = 1.0 / (1.0 + max(deg[i], deg[j]))
+    np.fill_diagonal(M, 1.0 - M.sum(axis=1))
+    return M.astype(np.float32)

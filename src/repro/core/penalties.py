@@ -1,0 +1,61 @@
+"""Folded-concave penalties via one-step local linear approximation (LLA).
+
+Paper Section 2.3(iii) and Conclusion: the generalized ADMM extends to
+SCAD (Fan & Li 2001), MCP (Zhang 2010) and the adaptive lasso (Zou 2006)
+"via a straightforward linear approximation" (Zou & Li 2008).  The LLA
+recipe: fit the l1 solution (stage 1), then re-fit with per-coordinate
+penalty weights lam_j = pen'(|beta_j^(1)|; lam) / lam (stage 2).  The
+per-coordinate weights multiply the soft-threshold level in update (7a'),
+so the stage-2 solve reuses Algorithm 1 unchanged.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.admm import ADMMConfig, decsvm_fit
+
+Array = jax.Array
+
+
+def scad_weight(beta: Array, lam: float, a: float = 3.7) -> Array:
+    """SCAD'(|b|)/lam: 1 on [0, lam], decays linearly, 0 beyond a*lam."""
+    ab = jnp.abs(beta)
+    w = jnp.where(ab <= lam, 1.0,
+                  jnp.maximum(a * lam - ab, 0.0) / ((a - 1.0) * lam))
+    return w
+
+
+def mcp_weight(beta: Array, lam: float, gamma: float = 3.0) -> Array:
+    """MCP'(|b|)/lam = max(0, 1 - |b|/(gamma*lam))."""
+    return jnp.maximum(0.0, 1.0 - jnp.abs(beta) / (gamma * lam))
+
+
+def adaptive_weight(beta: Array, lam: float, eps: float = 0.05,
+                    power: float = 1.0) -> Array:
+    """Adaptive-lasso weights (eps/(|b|+eps))^power in (0, 1]."""
+    return (eps / (jnp.abs(beta) + eps)) ** power
+
+
+PENALTIES = {
+    "scad": scad_weight,
+    "mcp": mcp_weight,
+    "adaptive": adaptive_weight,
+}
+
+
+def decsvm_fit_lla(X: Array, y: Array, W: Array, cfg: ADMMConfig,
+                   penalty: str = "scad", **pen_kwargs):
+    """Two-stage LLA: l1 pilot -> penalty-weighted re-fit.
+
+    Weights are computed from the network-average pilot (each node can form
+    it with one extra all-reduce round in deployment).
+    Returns (B_stage2, weights).
+    """
+    if penalty not in PENALTIES:
+        raise ValueError(f"penalty {penalty!r} not in {sorted(PENALTIES)}")
+    B1 = decsvm_fit(X, y, W, cfg)
+    pilot = jnp.mean(B1, axis=0)
+    w = PENALTIES[penalty](pilot, cfg.lam, **pen_kwargs)
+    B2 = decsvm_fit(X, y, W, cfg, lam_weights=w)
+    return B2, w

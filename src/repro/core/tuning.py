@@ -1,0 +1,55 @@
+"""Tuning-parameter selection: the modified BIC of Zhang et al. (2016)
+(paper Section 4.1) plus the Theorem-3 bandwidth rule.
+
+    BIC(lambda) = N^-1 sum_l sum_i (1 - y_i x_i' b_l)_+
+                  + sqrt(log N) * log p * mean_l |supp(b_l)| / N
+
+(the paper's display omits the 1/N on the penalty; we normalize both terms
+per-sample so the criterion is scale-consistent — noted in DESIGN.md).
+A gossip protocol would broadcast the two scalars in deployment; here the
+reduction is exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core import metrics
+
+
+def modified_bic(X: np.ndarray, y: np.ndarray, B: np.ndarray,
+                 tol: float = 1e-8) -> float:
+    """X: (m, n, p), y: (m, n), B: (m, p)."""
+    X, y, B = map(np.asarray, (X, y, B))
+    m, n, p = X.shape
+    N = m * n
+    margins = y * np.einsum("mnp,mp->mn", X, B)
+    hinge = np.maximum(1.0 - margins, 0.0).sum() / N
+    mean_supp = np.mean([(np.abs(b) > tol).sum() for b in B])
+    return hinge + math.sqrt(math.log(N)) * math.log(p) * mean_supp / N
+
+
+def lambda_grid(X: np.ndarray, y: np.ndarray, num: int = 12,
+                min_frac: float = 1e-3) -> np.ndarray:
+    """Log-spaced grid below lambda_max = |X'y/N|_inf (all-zero threshold)."""
+    X2 = np.asarray(X).reshape(-1, X.shape[-1])
+    y2 = np.asarray(y).reshape(-1)
+    lam_max = float(np.max(np.abs(X2.T @ y2)) / len(y2))
+    return np.logspace(math.log10(lam_max), math.log10(lam_max * min_frac), num)
+
+
+def select_lambda(fit_fn: Callable[[float], np.ndarray], X: np.ndarray,
+                  y: np.ndarray, lams: Sequence[float]):
+    """Fit at each lambda, return (best_lambda, best_B, table)."""
+    best = (None, None, np.inf)
+    table = []
+    for lam in lams:
+        B = np.asarray(fit_fn(float(lam)))
+        crit = modified_bic(X, y, B)
+        table.append((float(lam), crit, metrics.mean_support_size(B)))
+        if crit < best[2]:
+            best = (float(lam), B, crit)
+    return best[0], best[1], table

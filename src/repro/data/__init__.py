@@ -1,0 +1,5 @@
+from repro.data.synthetic import (input_specs, sample_batch, sample_decode_state,
+                                  SHAPES, token_stream)
+
+__all__ = ["input_specs", "sample_batch", "sample_decode_state", "SHAPES",
+           "token_stream"]

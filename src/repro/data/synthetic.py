@@ -1,0 +1,116 @@
+"""Synthetic data pipeline + assigned input shapes.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStructs for the dry-run
+(no allocation); ``sample_batch`` returns concrete arrays for smoke tests
+and CPU training.  The modality frontends are stubs per the assignment:
+audio/vision entries provide precomputed frame/patch embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+def _text_len(cfg: ModelConfig, seq: int) -> int:
+    if cfg.frontend == "vision":
+        return seq - cfg.frontend_len
+    return seq
+
+
+def _enc_len(cfg: ModelConfig, seq: int) -> int:
+    # audio encoder frames: quarter of the decoder length, capped at the
+    # stub frontend length
+    return min(cfg.frontend_len, max(seq // 4, 16))
+
+
+def input_specs(cfg: ModelConfig, shape: str | InputShape,
+                dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of a step."""
+    sh = SHAPES[shape] if isinstance(shape, str) else shape
+    B, S = sh.global_batch, sh.seq_len
+    f = jax.ShapeDtypeStruct
+    if sh.kind in ("train", "prefill"):
+        st = _text_len(cfg, S)
+        batch = {"tokens": f((B, st), jnp.int32),
+                 "labels": f((B, st), jnp.int32)}
+        if cfg.frontend == "vision":
+            batch["media"] = f((B, cfg.frontend_len, cfg.d_model), dtype)
+        if cfg.is_encoder_decoder:
+            batch["enc_media"] = f((B, _enc_len(cfg, S), cfg.d_model), dtype)
+        return batch
+    # decode: one token + positions
+    return {"token": f((B,), jnp.int32),
+            "pos": f((), jnp.int32)}
+
+
+def sample_batch(cfg: ModelConfig, shape: str | InputShape, seed: int = 0
+                 ) -> Dict[str, Any]:
+    """Concrete random batch matching input_specs (smoke tests / training)."""
+    sh = SHAPES[shape] if isinstance(shape, str) else shape
+    rng = np.random.default_rng(seed)
+    B, S = sh.global_batch, sh.seq_len
+    st = _text_len(cfg, S)
+    V = cfg.vocab_size
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, V, (B, st)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, V, (B, st)), jnp.int32),
+    }
+    dt = jnp.dtype(cfg.param_dtype)
+    if cfg.frontend == "vision":
+        batch["media"] = jnp.asarray(
+            rng.standard_normal((B, cfg.frontend_len, cfg.d_model)) * 0.02, dt)
+    if cfg.is_encoder_decoder:
+        batch["enc_media"] = jnp.asarray(
+            rng.standard_normal((B, _enc_len(cfg, S), cfg.d_model)) * 0.02, dt)
+    return batch
+
+
+def sample_decode_state(cfg: ModelConfig, shape: str | InputShape,
+                        seed: int = 0):
+    sh = SHAPES[shape] if isinstance(shape, str) else shape
+    rng = np.random.default_rng(seed)
+    token = jnp.asarray(rng.integers(0, cfg.vocab_size, (sh.global_batch,)),
+                        jnp.int32)
+    pos = jnp.asarray(sh.seq_len // 2, jnp.int32)
+    return token, pos
+
+
+def token_stream(cfg: ModelConfig, batch: int, seq: int, seed: int = 0):
+    """Infinite synthetic LM batches with a learnable bigram structure
+    (so a real model's loss visibly decreases during example training)."""
+    rng = np.random.default_rng(seed)
+    V = min(cfg.vocab_size, 4096)
+    perm = rng.permutation(V)
+    while True:
+        start = rng.integers(0, V, batch)
+        toks = np.empty((batch, seq + 1), np.int64)
+        toks[:, 0] = start
+        noise = rng.random((batch, seq)) < 0.1
+        nxt = rng.integers(0, V, (batch, seq))
+        for t in range(seq):
+            det = perm[toks[:, t] % V]
+            toks[:, t + 1] = np.where(noise[:, t], nxt[:, t], det)
+        yield {"tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+               "labels": jnp.asarray(toks[:, 1:], jnp.int32)}

@@ -1,0 +1,144 @@
+"""Pallas TPU kernel for the fused deCSVM ADMM local update (eq. 7a').
+
+The update is a matvec chain  margin -> L_h' weight -> X^T w -> soft-threshold.
+Arithmetic intensity is ~2 flops per element of X read twice from HBM, i.e.
+firmly memory-bound on TPU (197 TFLOP/s vs 819 GB/s); the kernel's job is to
+stream X through VMEM exactly twice with no intermediate HBM round-trips:
+
+  pass 1 (grid n_tiles x p_tiles, p fastest): accumulate X @ beta into the
+         margin vector, epilogue turns it into w = L_h'(y*margin) * y / n;
+  pass 2 (grid p_tiles x n_tiles, n fastest): accumulate X^T w, epilogue
+         applies  S_{lam w}[omega (rho b - grad - p + neigh)].
+
+Tiles are (block_n, block_p) with block_p a multiple of 128 (lane width) and
+block_n a multiple of 8 (sublane), so both passes feed the MXU with aligned
+(8k, 128k) operands.  Scalars (rho, omega, lam) arrive as (1,1) operands so
+the kernel stays traceable under vmap over network nodes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import losses
+
+
+def _margin_weights_kernel(x_ref, y_ref, beta_ref, w_ref, *, h: float,
+                           kernel: str, n_total: int):
+    """Accumulate partial X@beta; at the last p-tile convert to weights."""
+    j = pl.program_id(1)
+    partial = jnp.dot(x_ref[...], beta_ref[...],
+                      preferred_element_type=jnp.float32)
+
+    @pl.when(j == 0)
+    def _init():
+        w_ref[...] = partial
+
+    @pl.when(j > 0)
+    def _acc():
+        w_ref[...] += partial
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _epilogue():
+        kern = losses.get_kernel(kernel)
+        y = y_ref[...]
+        margin = y * w_ref[...]
+        w_ref[...] = kern.dloss(margin, h) * y * (1.0 / n_total)
+
+
+def _grad_update_kernel(x_ref, w_ref, beta_ref, pdual_ref, neigh_ref,
+                        rho_ref, omega_ref, lam_ref, out_ref):
+    """Accumulate X^T w; at the last n-tile apply the 7a' soft-threshold."""
+    k = pl.program_id(1)
+    partial = jnp.dot(x_ref[...].T, w_ref[...],
+                      preferred_element_type=jnp.float32)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = partial
+
+    @pl.when(k > 0)
+    def _acc():
+        out_ref[...] += partial
+
+    @pl.when(k == pl.num_programs(1) - 1)
+    def _epilogue():
+        rho = rho_ref[0, 0]
+        omega = omega_ref[0, 0]
+        lam = lam_ref[0, 0]
+        z = rho * beta_ref[...] - out_ref[...] - pdual_ref[...] + neigh_ref[...]
+        zo = omega * z
+        t = lam * omega
+        out_ref[...] = jnp.sign(zo) * jnp.maximum(jnp.abs(zo) - t, 0.0)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("h", "kernel", "block_n", "block_p", "interpret"))
+def csvm_local_update(X, y, beta, p_dual, neigh, rho, omega, lam, *,
+                      h: float, kernel: str = "epanechnikov",
+                      block_n: int = 256, block_p: int = 512,
+                      interpret: bool = True):
+    """Fused ADMM local update for one node.  Shapes: X (n, p), vectors (p,).
+
+    n and p are padded to tile multiples inside; padding rows get y=0 so
+    their dloss weight contributes sign(y)=0... (we zero w explicitly).
+    """
+    n, p = X.shape
+    bn, bp = min(block_n, _rup(n, 8)), min(block_p, _rup(p, 128))
+    n_pad, p_pad = _rup(n, bn), _rup(p, bp)
+    Xp = jnp.pad(X, ((0, n_pad - n), (0, p_pad - p)))
+    yp = jnp.pad(y, (0, n_pad - n))            # y=0 rows -> w=0 after mask
+    bpad = jnp.pad(beta, (0, p_pad - p))
+    ppad = jnp.pad(p_dual, (0, p_pad - p))
+    npad = jnp.pad(neigh, (0, p_pad - p))
+
+    ycol = yp[:, None].astype(jnp.float32)
+    bcol = bpad[:, None].astype(jnp.float32)
+    pcol = ppad[:, None].astype(jnp.float32)
+    ncol = npad[:, None].astype(jnp.float32)
+    scal = lambda s: jnp.asarray(s, jnp.float32).reshape(1, 1)
+
+    grid1 = (n_pad // bn, p_pad // bp)
+    w = pl.pallas_call(
+        functools.partial(_margin_weights_kernel, h=h, kernel=kernel, n_total=n),
+        grid=grid1,
+        in_specs=[
+            pl.BlockSpec((bn, bp), lambda i, j: (i, j)),
+            pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bp, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, 1), jnp.float32),
+        interpret=interpret,
+    )(Xp.astype(jnp.float32), ycol, bcol)
+    # padded rows have y=0 => margin weight = dloss(0)*0 = 0 already; but
+    # dloss(0)*y=0 exactly, so no extra masking is required.
+
+    grid2 = (p_pad // bp, n_pad // bn)
+    out = pl.pallas_call(
+        _grad_update_kernel,
+        grid=grid2,
+        in_specs=[
+            pl.BlockSpec((bn, bp), lambda j, k: (k, j)),
+            pl.BlockSpec((bn, 1), lambda j, k: (k, 0)),
+            pl.BlockSpec((bp, 1), lambda j, k: (j, 0)),
+            pl.BlockSpec((bp, 1), lambda j, k: (j, 0)),
+            pl.BlockSpec((bp, 1), lambda j, k: (j, 0)),
+            pl.BlockSpec((1, 1), lambda j, k: (0, 0)),
+            pl.BlockSpec((1, 1), lambda j, k: (0, 0)),
+            pl.BlockSpec((1, 1), lambda j, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bp, 1), lambda j, k: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((p_pad, 1), jnp.float32),
+        interpret=interpret,
+    )(Xp.astype(jnp.float32), w, bcol, pcol, ncol,
+      scal(rho), scal(omega), scal(lam))
+    return out[:p, 0].astype(X.dtype)
+
+
+def _rup(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult

@@ -1,0 +1,131 @@
+"""Pallas TPU flash-attention (blockwise online-softmax) kernel.
+
+Used by prefill paths of all attention architectures.  Supports causal and
+sliding-window masks and GQA head mapping (the kv BlockSpec index_map folds
+the query head onto its kv group, so kv tiles are never replicated in HBM).
+
+Grid: (batch*heads, q_tiles, kv_tiles), kv fastest.  Per (bh, qi) the kernel
+maintains the online-softmax state (m, l, acc) in VMEM scratch and writes the
+normalized output at the last kv tile.  Block shapes: q/o (1, bq, D),
+k/v (1, bk, D) — D is the full head dim (<=256 for every assigned arch),
+bq=bk=128 by default so tiles are MXU-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  sm_scale: float, causal: bool, window: int | None,
+                  bq: int, bk: int, kv_len: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)            # (bq, D)
+    k = k_ref[0].astype(jnp.float32)            # (bk, D)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * sm_scale
+
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = k_pos < kv_len          # never attend to padded kv positions
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_scr[...]                          # (bq, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    pexp = jnp.exp(s - m_new)                    # (bq, bk)
+    l_new = alpha * l_scr[...] + jnp.sum(pexp, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+        pexp, v_ref[0].astype(jnp.float32), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _finalize():
+        # guard fully-masked rows (l == 0) — emit zeros, matching a softmax
+        # over an empty set convention used by the serving path.
+        l = l_scr[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_scr[...] / safe).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "sm_scale", "block_q", "block_k",
+                     "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
+                    sm_scale: float | None = None, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = True):
+    """q: (B, H, S, D); k, v: (B, KV, S, D).  Returns (B, H, S, D)."""
+    B, H, S, D = q.shape
+    KV = k.shape[1]
+    assert H % KV == 0, (H, KV)
+    g = H // KV
+    scale = float(sm_scale) if sm_scale is not None else 1.0 / (D ** 0.5)
+
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    s_pad = _rup(S, max(bq, bk))
+    if s_pad != S:
+        pad = ((0, 0), (0, 0), (0, s_pad - S), (0, 0))
+        q = jnp.pad(q, pad)
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    # Padded kv positions must never be attended to: the causal mask covers
+    # q<S attending kv>=S only if causal; enforce via window-independent mask
+    # by treating pad kv as future positions (k_pos >= S > q_pos). For
+    # non-causal use we mask explicitly below via kv length.
+    qf = q.reshape(B * H, s_pad, D)
+    kf = k.reshape(B * KV, s_pad, D)
+    vf = v.reshape(B * KV, s_pad, D)
+
+    grid = (B * H, s_pad // bq, s_pad // bk)
+
+    def q_map(bh, qi, ki):
+        return (bh, qi, 0)
+
+    def kv_map(bh, qi, ki):
+        b, h = bh // H, bh % H
+        return (b * KV + h // g, ki, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, sm_scale=scale, causal=causal,
+                          window=window, bq=bq, bk=bk, kv_len=S),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), q_map),
+            pl.BlockSpec((1, bk, D), kv_map),
+            pl.BlockSpec((1, bk, D), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), q_map),
+        out_shape=jax.ShapeDtypeStruct((B * H, s_pad, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, s_pad, D)[:, :, :S]
+
+
+def _rup(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult

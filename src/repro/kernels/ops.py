@@ -1,0 +1,36 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; the
+kernel bodies then execute in Python for bit-accurate validation) and False
+on real TPU hardware.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.csvm_update import csvm_local_update as _csvm_local_update
+from repro.kernels.flash_attention import flash_attention as _flash_attention
+from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def csvm_local_update(X, y, beta, p_dual, neigh, rho, omega, lam, *,
+                      h, kernel="epanechnikov", interpret=None, **kw):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _csvm_local_update(X, y, beta, p_dual, neigh, rho, omega, lam,
+                              h=h, kernel=kernel, interpret=interpret, **kw)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, sm_scale=None,
+                    interpret=None, **kw):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _flash_attention(q, k, v, causal=causal, window=window,
+                            sm_scale=sm_scale, interpret=interpret, **kw)
+
+
+def ssd_scan(x, dt, A, B, C, D, *, chunk=64, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _ssd_scan(x, dt, A, B, C, D, chunk=chunk, interpret=interpret)

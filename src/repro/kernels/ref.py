@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import losses
+from repro.core.admm import soft_threshold
+
+Array = jax.Array
+
+
+def decsvm_local_update(X: Array, y: Array, beta: Array, p_dual: Array,
+                        neigh: Array, rho, omega, lam,
+                        h: float, kernel: str = "epanechnikov") -> Array:
+    """Oracle for the fused ADMM local update (paper eq. 7a').
+
+    X: (n, p), y: (n,), beta/p_dual/neigh: (p,); rho/omega/lam scalars.
+    neigh is the precomputed tau * sum_{k in N(l)} (beta_l + beta_k) term.
+    Returns beta_new (p,).
+    """
+    kern = losses.get_kernel(kernel)
+    margin = y * (X @ beta)
+    w = kern.dloss(margin, h) * y / X.shape[0]
+    grad = X.T @ w
+    z = rho * beta - grad - p_dual + neigh
+    return soft_threshold(omega * z, lam * omega)
+
+
+def mha(q: Array, k: Array, v: Array, *, causal: bool = True,
+        window: int | None = None, sm_scale: float | None = None) -> Array:
+    """Grouped-query attention oracle.
+
+    q: (B, H, S, D); k, v: (B, KV, S, D) with H % KV == 0.
+    window: sliding-window width (attend to [i-window+1, i]); None = full.
+    """
+    B, H, S, D = q.shape
+    KV = k.shape[1]
+    g = H // KV
+    scale = sm_scale if sm_scale is not None else 1.0 / jnp.sqrt(D).astype(q.dtype)
+    kr = jnp.repeat(k, g, axis=1)
+    vr = jnp.repeat(v, g, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kr.astype(jnp.float32)) * scale
+    qi = jnp.arange(S)[:, None]
+    ki = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), dtype=bool)
+    if causal:
+        mask &= ki <= qi
+    if window is not None:
+        mask &= ki > qi - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vr.astype(jnp.float32))
+    return out.astype(q.dtype)

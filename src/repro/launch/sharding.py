@@ -1,0 +1,160 @@
+"""Sharding rules: map every parameter / activation / cache leaf to a
+PartitionSpec for the production mesh.
+
+Baseline layout (recorded in EXPERIMENTS.md §Perf as the starting point):
+  - weights 2D-sharded "FSDP x TP": last dim -> "model", second-to-last ->
+    "data", each only when divisible by the axis size (else replicated on
+    that axis).  Stacked-layer leading axes are never sharded.
+  - batch dim of activations -> ("pod", "data") [pod extends data parallel]
+  - decode KV cache: sequence dim -> "model" (sequence-sharded cache — every
+    kv_heads value works regardless of the 16-way model axis; distributed
+    flash-decode is synthesized by GSPMD from this constraint).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+# parameter path fragments whose leading axis is a stacked-layer axis
+_STACK_KEYS = ("layers", "pattern_layers", "tail_layers", "enc_layers")
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return dict(mesh.shape).get(name, 1)
+
+
+def _leaf_spec(path: str, shape: tuple, mesh: Mesh, *, fsdp: bool = True,
+               expert_parallel: bool = False) -> P:
+    ms, ds = _axis_size(mesh, "model"), _axis_size(mesh, "data")
+    # Vocab tables: shard the vocab dim on "model" and leave d replicated.
+    # Sharding d on "data" makes GSPMD contract over partial-d and emit
+    # REPLICATED full-vocab logits + a giant all-reduce (observed: 13 GB/dev
+    # on mamba2 train_4k).  V-sharded weights keep logits vocab-sharded.
+    if "embed" in path and "pos_embed" not in path:
+        spec = [None] * len(shape)
+        if shape[0] % ms == 0:
+            spec[0] = "model"
+        return P(*spec)
+    if "lm_head" in path:
+        spec = [None] * len(shape)
+        if shape[-1] % ms == 0:
+            spec[-1] = "model"
+        return P(*spec)
+    stacked = any(k in path for k in _STACK_KEYS)
+    dims = list(shape)
+    spec: list = [None] * len(dims)
+    start = 1 if (stacked and len(dims) >= 2) else 0
+    free = list(range(start, len(dims)))
+    if not free:
+        return P()
+    # Row-parallel second matmuls (Megatron pairing): wo / w_down /
+    # out_proj / w_out contract over the dim their column-parallel partner
+    # sharded on "model" — shard IN on "model", OUT on "data".  (§Perf H2
+    # iteration 4: the generic everything-column-parallel rule forced GSPMD
+    # to all-gather the (B,S,heads*dim) / (B,S,d_ff) activations per layer.)
+    leaf_name = path.rsplit("/", 1)[-1]
+    if leaf_name in ("wo", "w_down", "out_proj", "w_out") and len(free) >= 2:
+        i_in, i_out = free[-2], free[-1]
+        if dims[i_in] % ms == 0 and dims[i_in] >= ms:
+            spec[i_in] = "model"
+        if fsdp and dims[i_out] % ds == 0 and dims[i_out] >= ds:
+            spec[i_out] = "data"
+        if expert_parallel and len(free) == 3 and dims[free[0]] % ms == 0:
+            spec = [None] * len(dims)
+            spec[free[0]] = "model"
+            if fsdp and dims[i_out] % ds == 0:
+                spec[i_out] = "data"
+        return P(*spec)
+    # Expert-parallel variant (§Perf H3): shard the expert dim on "model"
+    # for stacked (E, d, f) expert tensors when divisible.
+    if expert_parallel and len(free) == 3 and ("w_gate" in path or
+                                               "w_up" in path or
+                                               "w_down" in path):
+        e = free[0]
+        if dims[e] % ms == 0 and dims[e] >= ms:
+            spec[e] = "model"
+            if fsdp and dims[free[-1]] % ds == 0:
+                spec[free[-1]] = "data"
+            return P(*spec)
+    # last free dim -> model, previous free dim -> data (when divisible)
+    last = free[-1]
+    if dims[last] % ms == 0 and dims[last] >= ms:
+        spec[last] = "model"
+    if fsdp and len(free) >= 2:
+        prev = free[-2]
+        if dims[prev] % ds == 0 and dims[prev] >= ds:
+            spec[prev] = "data"
+    return P(*spec)
+
+
+def param_pspecs(params: Any, mesh: Mesh, *, fsdp: bool = True,
+                 expert_parallel: bool = False) -> Any:
+    """PartitionSpec pytree matching ``params`` (works on ShapeDtypeStructs).
+
+    fsdp=False gives the ZeRO-1 weight layout (weights model-sharded only,
+    no per-layer all-gather over "data"); combine with fsdp=True optimizer
+    moments for the memory/collective trade measured in §Perf H2.
+    """
+    def one(path, leaf):
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        return _leaf_spec(pstr, leaf.shape, mesh, fsdp=fsdp,
+                          expert_parallel=expert_parallel)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def batch_pspecs(batch: Any, mesh: Mesh) -> Any:
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def one(leaf):
+        if leaf.ndim == 0:
+            return P()
+        b = leaf.shape[0]
+        total = int(np.prod([_axis_size(mesh, a) for a in dp]))
+        if b % total == 0 and b >= total:
+            return P(dp)
+        return P()
+
+    return jax.tree.map(one, batch)
+
+
+def cache_pspecs(cache: Any, cfg: ModelConfig, mesh: Mesh) -> Any:
+    """Decode-state layout: cache seq dim -> model, batch -> data axes."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    ms = _axis_size(mesh, "model")
+    dtot = int(np.prod([_axis_size(mesh, a) for a in dp]))
+
+    def one(path, leaf):
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        dims = list(leaf.shape)
+        spec: list = [None] * len(dims)
+        # stacked (L, B, ...) vs flat (B, ...)
+        off = 1 if ("layers" in pstr or "cross_kv" in pstr) and len(dims) > 1 \
+            else 0
+        if len(dims) > off and dims[off] % dtot == 0 and dims[off] >= dtot:
+            spec[off] = dp if len(dp) > 1 else dp[0] if dp else None
+        # KV cache (+ int8 scales): (..., B, S, KV, D|1) — shard S on model
+        if pstr.endswith("k") or pstr.endswith("v") or "scale" in pstr:
+            sdim = off + 1
+            if len(dims) > sdim and dims[sdim] % ms == 0 and dims[sdim] >= ms:
+                spec[sdim] = "model"
+        # SSM / LRU states: shard the feature dim on model
+        if "ssm" in pstr or pstr.endswith("h") or "conv" in pstr:
+            fdim = len(dims) - 1 if "ssm" not in pstr else 2
+            if len(dims) > fdim and dims[fdim] % ms == 0 and dims[fdim] >= ms:
+                spec[fdim] = "model"
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def to_named(tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,113 @@
+"""Training driver: builds the sharded train_step and (when run as a script)
+trains a model on synthetic data on the host devices.
+
+``make_train_step`` is shared by the real trainer, the examples and the
+multi-pod dry-run (which lowers it against ShapeDtypeStructs).
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model
+from repro.models.config import ModelConfig
+from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+from repro.launch import sharding as shd
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    total_steps: int = 1000, mode: str = "train"):
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(model.loss_fn)(params, batch, cfg,
+                                                        mode=mode)
+        lr_scale = cosine_schedule(opt_state["step"], total_steps, warmup=20)
+        params, opt_state, gnorm = adamw_update(params, grads, opt_state,
+                                                opt_cfg, lr_scale)
+        return params, opt_state, {"loss": loss, "gnorm": gnorm}
+
+    return train_step
+
+
+def make_jitted_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, mesh,
+                           batch_struct, total_steps: int = 1000,
+                           mode: str = "train", fsdp: bool = True,
+                           expert_parallel: bool = False):
+    """jit with explicit in/out shardings for the given mesh.
+
+    fsdp=False -> ZeRO-1 layout: weights model-sharded only (no per-layer
+    weight all-gather over "data"), optimizer moments still fully sharded.
+    """
+    params_struct = jax.eval_shape(
+        functools.partial(model.init_params, cfg), jax.random.PRNGKey(0))
+    opt_struct = jax.eval_shape(adamw_init, params_struct)
+    p_specs = shd.param_pspecs(params_struct, mesh, fsdp=fsdp,
+                               expert_parallel=expert_parallel)
+    m_specs = shd.param_pspecs(params_struct, mesh, fsdp=True,
+                               expert_parallel=expert_parallel)
+    o_specs = {"m": m_specs, "v": m_specs,
+               "step": jax.sharding.PartitionSpec()}
+    b_specs = shd.batch_pspecs(batch_struct, mesh)
+    metric_specs = {"loss": jax.sharding.PartitionSpec(),
+                    "gnorm": jax.sharding.PartitionSpec()}
+    step = make_train_step(cfg, opt_cfg, total_steps, mode)
+    jitted = jax.jit(
+        step,
+        in_shardings=(shd.to_named(p_specs, mesh),
+                      shd.to_named(o_specs, mesh),
+                      shd.to_named(b_specs, mesh)),
+        out_shardings=(shd.to_named(p_specs, mesh),
+                       shd.to_named(o_specs, mesh),
+                       shd.to_named(metric_specs, mesh)),
+        donate_argnums=(0, 1),
+    )
+    return jitted, (p_specs, o_specs, b_specs)
+
+
+def train_loop(cfg: ModelConfig, *, steps: int, batch: int, seq: int,
+               lr: float = 3e-4, log_every: int = 10, seed: int = 0):
+    """CPU-scale end-to-end training on synthetic bigram data."""
+    from repro.data.synthetic import token_stream
+
+    opt_cfg = AdamWConfig(lr=lr)
+    params = model.init_params(cfg, jax.random.PRNGKey(seed))
+    opt_state = adamw_init(params)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, total_steps=steps))
+    stream = token_stream(cfg, batch, seq, seed=seed)
+    n_params = sum(p.size for p in jax.tree.leaves(params))
+    print(f"model={cfg.name} params={n_params/1e6:.1f}M "
+          f"batch={batch} seq={seq}")
+    t0 = time.time()
+    losses = []
+    for i in range(steps):
+        b = next(stream)
+        params, opt_state, m = step_fn(params, opt_state, b)
+        losses.append(float(m["loss"]))
+        if i % log_every == 0 or i == steps - 1:
+            dt = time.time() - t0
+            print(f"step {i:4d} loss={losses[-1]:.4f} "
+                  f"gnorm={float(m['gnorm']):.3f} ({dt:.1f}s)")
+    return params, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-14b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+    import repro.configs as configs
+    cfg = configs.get_reduced(args.arch)
+    train_loop(cfg, steps=args.steps, batch=args.batch, seq=args.seq,
+               lr=args.lr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from repro.models.config import ModelConfig
+from repro.models import attention, blocks, layers, mlp, moe, model, rglru, ssm
+
+__all__ = ["ModelConfig", "attention", "blocks", "layers", "mlp", "moe",
+           "model", "rglru", "ssm"]

@@ -1,0 +1,224 @@
+"""Grouped-query attention: init, full-sequence (train/prefill) forward with
+q-chunking (flash-style memory behaviour in pure XLA), and one-token decode
+against a preallocated KV cache.
+
+The q-chunked path is the lowering-friendly twin of the Pallas
+``flash_attention`` kernel (kernels/flash_attention.py): on TPU the kernel
+replaces it 1:1; on this CPU container the chunked XLA path is what the
+dry-run lowers, with identical numerics (tested against kernels/ref.py).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+from repro.models.shardctx import constrain
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg: ModelConfig, dtype, cross: bool = False) -> dict:
+    d, A, KVD = cfg.d_model, cfg.attn_dim, cfg.kv_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": layers.dense_init(ks[0], (d, A), dtype),
+        "wk": layers.dense_init(ks[1], (d, KVD), dtype),
+        "wv": layers.dense_init(ks[2], (d, KVD), dtype),
+        "wo": layers.dense_init(ks[3], (A, d), dtype),
+    }
+    if cfg.attn_bias:
+        p["bq"] = jnp.zeros((A,), dtype)
+        p["bk"] = jnp.zeros((KVD,), dtype)
+        p["bv"] = jnp.zeros((KVD,), dtype)
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = jnp.zeros((cfg.head_dim,), dtype)
+        p["k_norm"] = jnp.zeros((cfg.head_dim,), dtype)
+    return p
+
+
+def _project_qkv(params, x, kv_x, cfg: ModelConfig, *, rope: bool,
+                 q_positions: Optional[Array], k_positions: Optional[Array]):
+    B = x.shape[0]
+    H, KV, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,da->bsa", x, params["wq"])
+    k = jnp.einsum("bsd,da->bsa", kv_x, params["wk"])
+    v = jnp.einsum("bsd,da->bsa", kv_x, params["wv"])
+    if cfg.attn_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(B, -1, H, D)
+    k = k.reshape(B, -1, KV, D)
+    v = v.reshape(B, -1, KV, D)
+    if cfg.attn_act_shard:
+        # q sharded over heads on "model"; kv replicated (kv_heads may not
+        # divide the model axis) — Megatron-style GQA layout, avoids GSPMD
+        # resharding churn between 8-way kv and 16-way q tensors.
+        q = constrain(q, "data", None, "model", None)
+        k = constrain(k, "data", None, None, None)
+        v = constrain(v, "data", None, None, None)
+    if cfg.qk_norm:
+        q = layers.rmsnorm(q, params["q_norm"])
+        k = layers.rmsnorm(k, params["k_norm"])
+    if rope and cfg.pos_embedding == "rope":
+        q = layers.apply_rope(q, q_positions, fraction=cfg.rope_fraction,
+                              theta=cfg.rope_theta)
+        k = layers.apply_rope(k, k_positions, fraction=cfg.rope_fraction,
+                              theta=cfg.rope_theta)
+    return q, k, v
+
+
+def _attend(q, k, v, q_pos, k_pos, *, causal: bool, window: Optional[int]):
+    """q: (B,Sq,H,D); k,v: (B,Sk,KV,D). Returns (B,Sq,H,D).  fp32 softmax."""
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    g = H // KV
+    qg = q.reshape(B, Sq, KV, g, D).astype(jnp.float32)
+    scale = D ** -0.5
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32)) * scale
+    mask = jnp.ones((Sq, k.shape[1]), dtype=bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def attention_forward(params, x, cfg: ModelConfig, *, causal: bool = True,
+                      window: Optional[int] = None, kv_x: Optional[Array] = None,
+                      positions: Optional[Array] = None,
+                      q_chunk: int = 1024) -> Array:
+    """Full-sequence attention.  x: (B, S, d) -> (B, S, d)."""
+    cross = kv_x is not None
+    kv_src = kv_x if cross else x
+    S = x.shape[1]
+    Skv = kv_src.shape[1]
+    q_pos = positions if positions is not None else jnp.arange(S)
+    k_pos = jnp.arange(Skv)
+    q, k, v = _project_qkv(params, x, kv_src, cfg, rope=not cross,
+                           q_positions=q_pos, k_positions=k_pos)
+    if S <= q_chunk or S % q_chunk != 0:
+        out = _attend(q, k, v, q_pos, k_pos, causal=causal and not cross,
+                      window=window)
+    else:
+        nc = S // q_chunk
+        qs = q.reshape(q.shape[0], nc, q_chunk, *q.shape[2:])
+        qps = q_pos.reshape(nc, q_chunk)
+
+        @jax.checkpoint  # don't keep per-chunk fp32 logits/probs for backward
+        def body(carry, inp):
+            qc, qp = inp
+            oc = _attend(jnp.moveaxis(qc, 0, 0), k, v, qp, k_pos,
+                         causal=causal and not cross, window=window)
+            return carry, oc
+
+        # scan over chunks; put chunk axis first
+        _, outs = jax.lax.scan(body, None,
+                               (jnp.moveaxis(qs, 1, 0), qps))
+        out = jnp.moveaxis(outs, 0, 1).reshape(q.shape)
+    return jnp.einsum("bsa,ad->bsd", out.reshape(x.shape[0], S, -1),
+                      params["wo"])
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
+    KV, D = cfg.num_kv_heads, cfg.head_dim
+    if cfg.kv_cache_dtype == "int8":
+        return {
+            "k": jnp.zeros((batch, max_len, KV, D), jnp.int8),
+            "v": jnp.zeros((batch, max_len, KV, D), jnp.int8),
+            "k_scale": jnp.zeros((batch, max_len, KV, 1), jnp.float32),
+            "v_scale": jnp.zeros((batch, max_len, KV, 1), jnp.float32),
+        }
+    return {
+        "k": jnp.zeros((batch, max_len, KV, D), dtype),
+        "v": jnp.zeros((batch, max_len, KV, D), dtype),
+    }
+
+
+def _quantize_kv(x):
+    """(B, 1, KV, D) -> int8 values + per-(token, head) absmax scale."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                    keepdims=True) / 127.0
+    q = jnp.round(x.astype(jnp.float32) / jnp.maximum(scale, 1e-9))
+    return jnp.clip(q, -127, 127).astype(jnp.int8), scale
+
+
+def attention_decode(params, x1, cache: dict, pos: Array, cfg: ModelConfig, *,
+                     window: Optional[int] = None,
+                     cross_kv: Optional[dict] = None):
+    """One-token decode.  x1: (B, 1, d); pos: scalar current position.
+
+    Returns (out (B,1,d), updated cache).  With ``cross_kv`` set, attends the
+    fixed encoder cache instead (cache unchanged).
+    """
+    B = x1.shape[0]
+    H, KV, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    if cross_kv is not None:
+        k, v = cross_kv["k"], cross_kv["v"]
+        q = jnp.einsum("bsd,da->bsa", x1, params["wq"])
+        if cfg.attn_bias:
+            q = q + params["bq"]
+        q = q.reshape(B, 1, H, D)
+        Skv = k.shape[1]
+        out = _attend(q, k, v, jnp.full((1,), Skv, jnp.int32),
+                      jnp.arange(Skv), causal=False, window=None)
+        return jnp.einsum("bsa,ad->bsd", out.reshape(B, 1, -1), params["wo"]), cache
+
+    # pos may be a scalar (lockstep batch) or (B,) vector (continuous
+    # batching: every slot at its own position).
+    pos_b = jnp.broadcast_to(jnp.atleast_1d(pos), (B,))           # (B,)
+    q, k1, v1 = _project_qkv(params, x1, x1, cfg, rope=True,
+                             q_positions=pos_b[:, None],
+                             k_positions=pos_b[:, None])
+    # Ring-buffer cache: slot = pos mod cache_len.  When cache_len >= seq the
+    # ring degenerates to a plain cache; when cache_len == window the cache
+    # memory is O(window) — the sliding-window decode optimization.
+    Smax = cache["k"].shape[1]
+    slot = pos_b % Smax                                            # (B,)
+    quant = cfg.kv_cache_dtype == "int8"
+
+    def write(buf, new_row):
+        """Elementwise masked write at `slot` along the (possibly sharded)
+        sequence dim.  dynamic_update_slice at a traced index on a sharded
+        dim makes GSPMD all-gather the whole cache per token (§Perf H5);
+        the iota==slot select keeps every shard local."""
+        sel = (jnp.arange(buf.shape[1])[None, :] ==
+               slot[:, None])[:, :, None, None]
+        return jnp.where(sel, new_row.astype(buf.dtype), buf)
+
+    new_cache = {}
+    if quant:
+        k1q, k1s = _quantize_kv(k1)
+        v1q, v1s = _quantize_kv(v1)
+        kq = write(cache["k"], k1q)
+        vq = write(cache["v"], v1q)
+        ks = write(cache["k_scale"], k1s)
+        vs = write(cache["v_scale"], v1s)
+        new_cache = {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+        k = kq.astype(jnp.float32) * ks
+        v = vq.astype(jnp.float32) * vs
+    else:
+        k = write(cache["k"], k1)
+        v = write(cache["v"], v1)
+        new_cache = {"k": k, "v": v}
+    slots = jnp.arange(Smax)
+    # absolute position held by each slot: the largest q <= pos with
+    # q = slot (mod Smax); negative => slot not yet written
+    k_pos = pos_b[:, None] - ((pos_b[:, None] - slots[None, :]) % Smax)
+    qg = q.reshape(B, 1, KV, H // KV, D).astype(jnp.float32)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg,
+                        k.astype(jnp.float32)) * (D ** -0.5)
+    mask = (k_pos >= 0) & (k_pos <= pos_b[:, None])                # (B, S)
+    if window is not None:
+        mask &= k_pos > pos_b[:, None] - window
+    logits = jnp.where(mask[:, None, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(jnp.float32))
+    out = out.reshape(B, 1, H * D).astype(x1.dtype)
+    return (jnp.einsum("bsa,ad->bsd", out, params["wo"]), new_cache)

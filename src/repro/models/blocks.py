@@ -1,0 +1,117 @@
+"""Decoder/encoder blocks: dispatch over block kinds (attn / moe / ssm / rec)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers, mlp, moe, rglru, ssm
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+def block_kinds(cfg: ModelConfig) -> tuple[str, ...]:
+    """Per-layer kind for the decoder stack."""
+    if cfg.arch_type == "ssm":
+        return ("ssm",) * cfg.num_layers
+    if cfg.arch_type == "hybrid":
+        pat = cfg.block_pattern or ("rec", "rec", "attn")
+        return tuple(pat[i % len(pat)] for i in range(cfg.num_layers))
+    if cfg.arch_type == "moe":
+        return ("moe",) * cfg.num_layers
+    return ("attn",) * cfg.num_layers
+
+
+def init_block(key, cfg: ModelConfig, kind: str, dtype,
+               cross: bool = False) -> dict:
+    ks = jax.random.split(key, 5)
+    p = {"ln1": layers.init_norm(ks[0], cfg.d_model, cfg.norm, dtype),
+         "ln2": layers.init_norm(ks[1], cfg.d_model, cfg.norm, dtype)}
+    if kind == "ssm":
+        p["mixer"] = ssm.init_mamba(ks[2], cfg, dtype)
+        return p  # mamba blocks: mixer only (norm -> mixer -> residual)
+    if kind == "rec":
+        p["mixer"] = rglru.init_rglru_block(ks[2], cfg, dtype)
+    else:
+        p["attn"] = attention.init_attention(ks[2], cfg, dtype)
+    if cross:
+        p["cross"] = attention.init_attention(ks[3], cfg, dtype, cross=True)
+        p["ln_cross"] = layers.init_norm(ks[3], cfg.d_model, cfg.norm, dtype)
+    if kind == "moe":
+        p["moe"] = moe.init_moe(ks[4], cfg, dtype)
+    else:
+        p["mlp"] = mlp.init_mlp(ks[4], cfg, dtype)
+    return p
+
+
+def block_forward(params, x, cfg: ModelConfig, kind: str, *,
+                  causal: bool = True, window: Optional[int] = None,
+                  enc_out: Optional[Array] = None):
+    """Full-sequence block.  Returns (x, aux_loss)."""
+    from jax.ad_checkpoint import checkpoint_name
+    aux = jnp.zeros((), jnp.float32)
+    h = layers.apply_norm(x, params["ln1"], cfg.norm)
+    if kind == "ssm":
+        return x + checkpoint_name(
+            ssm.mamba_forward(params["mixer"], h, cfg), "mixer_out"), aux
+    if kind == "rec":
+        x = x + checkpoint_name(
+            rglru.rglru_block_forward(params["mixer"], h, cfg), "mixer_out")
+    else:
+        x = x + checkpoint_name(
+            attention.attention_forward(params["attn"], h, cfg,
+                                        causal=causal, window=window),
+            "mixer_out")
+    if enc_out is not None:
+        h = layers.apply_norm(x, params["ln_cross"], cfg.norm)
+        x = x + attention.attention_forward(params["cross"], h, cfg,
+                                            causal=False, kv_x=enc_out)
+    h = layers.apply_norm(x, params["ln2"], cfg.norm)
+    if kind == "moe":
+        y, aux = moe.moe_forward(params["moe"], h, cfg)
+        x = x + checkpoint_name(y, "mlp_out")
+    else:
+        x = x + checkpoint_name(mlp.mlp_forward(params["mlp"], h, cfg),
+                                "mlp_out")
+    return x, aux
+
+
+def init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                     dtype, window: Optional[int] = None) -> dict:
+    if kind == "ssm":
+        return ssm.init_mamba_cache(cfg, batch, dtype)
+    if kind == "rec":
+        return rglru.init_rglru_cache(cfg, batch, dtype)
+    cache_len = min(max_len, window) if window else max_len
+    return attention.init_kv_cache(cfg, batch, cache_len, dtype)
+
+
+def block_decode(params, x1, cache, pos, cfg: ModelConfig, kind: str, *,
+                 window: Optional[int] = None,
+                 cross_kv: Optional[dict] = None):
+    """One-token block step.  Returns (x1, new_cache)."""
+    h = layers.apply_norm(x1, params["ln1"], cfg.norm)
+    if kind == "ssm":
+        y, cache = ssm.mamba_decode(params["mixer"], h, cache, cfg)
+        return x1 + y, cache
+    if kind == "rec":
+        y, cache = rglru.rglru_block_decode(params["mixer"], h, cache, cfg)
+        x1 = x1 + y
+    else:
+        y, cache = attention.attention_decode(params["attn"], h, cache, pos,
+                                              cfg, window=window)
+        x1 = x1 + y
+    if cross_kv is not None:
+        h = layers.apply_norm(x1, params["ln_cross"], cfg.norm)
+        y, _ = attention.attention_decode(params["cross"], h, None, pos, cfg,
+                                          cross_kv=cross_kv)
+        x1 = x1 + y
+    h = layers.apply_norm(x1, params["ln2"], cfg.norm)
+    if kind == "moe":
+        y, _ = moe.moe_forward(params["moe"], h, cfg)
+        x1 = x1 + y
+    else:
+        x1 = x1 + mlp.mlp_forward(params["mlp"], h, cfg)
+    return x1, cache

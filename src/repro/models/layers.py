@@ -1,0 +1,72 @@
+"""Shared neural-net layers: norms, RoPE, embeddings, initializers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def dense_init(key, shape, dtype, scale: float = 0.02):
+    return (scale * jax.random.normal(key, shape)).astype(dtype)
+
+
+def rmsnorm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm(x: Array, scale: Array, bias: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_norm(x: Array, params: dict, kind: str) -> Array:
+    if kind == "rmsnorm":
+        return rmsnorm(x, params["scale"])
+    return layernorm(x, params["scale"], params["bias"])
+
+
+def init_norm(key, d: int, kind: str, dtype) -> dict:
+    if kind == "rmsnorm":
+        return {"scale": jnp.zeros((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def rope_freqs(head_dim: int, fraction: float, theta: float):
+    rot = int(head_dim * fraction) // 2 * 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    return inv, rot
+
+
+def apply_rope(x: Array, positions: Array, *, fraction: float = 1.0,
+               theta: float = 10000.0) -> Array:
+    """x: (..., S, H, D) rotary on the leading `fraction` of D.
+
+    positions: (..., S) integer positions (broadcastable to x's batch dims).
+    """
+    D = x.shape[-1]
+    inv, rot = rope_freqs(D, fraction, theta)
+    if rot == 0:
+        return x
+    ang = positions.astype(jnp.float32)[..., None] * inv         # (..., S, rot/2)
+    cos = jnp.cos(ang)[..., None, :]                              # (..., S, 1, rot/2)
+    sin = jnp.sin(ang)[..., None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    yr = jnp.stack([y1, y2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([yr.astype(x.dtype), xp], axis=-1)
+
+
+def gelu(x: Array) -> Array:
+    return jax.nn.gelu(x, approximate=True)
+
+
+def silu(x: Array) -> Array:
+    return jax.nn.silu(x)

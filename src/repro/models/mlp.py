@@ -1,0 +1,32 @@
+"""Feed-forward blocks: SwiGLU (llama-family) and GeLU (classic)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+
+def init_mlp(key, cfg: ModelConfig, dtype) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_act == "swiglu":
+        return {
+            "w_gate": layers.dense_init(ks[0], (d, f), dtype),
+            "w_up": layers.dense_init(ks[1], (d, f), dtype),
+            "w_down": layers.dense_init(ks[2], (f, d), dtype),
+        }
+    return {
+        "w_in": layers.dense_init(ks[0], (d, f), dtype),
+        "w_out": layers.dense_init(ks[1], (f, d), dtype),
+    }
+
+
+def mlp_forward(params: dict, x, cfg: ModelConfig):
+    if cfg.mlp_act == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, params["w_gate"])
+        u = jnp.einsum("bsd,df->bsf", x, params["w_up"])
+        return jnp.einsum("bsf,fd->bsd", layers.silu(g) * u, params["w_down"])
+    h = layers.gelu(jnp.einsum("bsd,df->bsf", x, params["w_in"]))
+    return jnp.einsum("bsf,fd->bsd", h, params["w_out"])

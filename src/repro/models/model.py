@@ -1,0 +1,333 @@
+"""Top-level language models.
+
+- ``TransformerLM``-style functional API: init / forward / loss / decode.
+- Homogeneous decoder stacks (dense, moe, ssm, vlm, audio enc/dec) are
+  *scanned*: per-layer params are stacked on a leading L axis so the HLO is
+  depth-independent (qwen3-32b's 64 layers compile as one layer body).
+- Heterogeneous stacks (recurrentgemma's rec/rec/attn pattern) use grouped
+  scan: one stacked stack per kind within each repeating pattern group.
+  (Implemented as a python loop over the pattern with scan over repeats.)
+- Modality frontends (ViT / speech codec) are stubs per the assignment:
+  ``media`` embeddings arrive precomputed with shape (B, frontend_len, d).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, blocks, layers
+from repro.models.config import ModelConfig
+from repro.models.shardctx import constrain
+
+Array = jax.Array
+MAX_LEARNED_POS = 8192
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _stacked_init(key, n: int, init_fn):
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    dtype = _dtype(cfg)
+    keys = jax.random.split(key, 8)
+    V, d = cfg.padded_vocab, cfg.d_model
+    params: Dict[str, Any] = {
+        "embed": layers.dense_init(keys[0], (V, d), dtype),
+        "final_norm": layers.init_norm(keys[1], d, cfg.norm, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.dense_init(keys[2], (d, V), dtype)
+    if cfg.pos_embedding == "learned":
+        params["pos_embed"] = layers.dense_init(keys[3], (MAX_LEARNED_POS, d),
+                                                dtype)
+    kinds = blocks.block_kinds(cfg)
+    cross = cfg.is_encoder_decoder
+    if len(set(kinds)) == 1:
+        params["layers"] = _stacked_init(
+            keys[4], cfg.num_layers,
+            lambda k: blocks.init_block(k, cfg, kinds[0], dtype, cross=cross))
+    else:
+        # grouped stacks: one stacked pytree per position in the pattern
+        pat = cfg.block_pattern
+        n_rep, rem = divmod(cfg.num_layers, len(pat))
+        gkeys = jax.random.split(keys[4], len(pat) + max(rem, 1))
+        params["pattern_layers"] = [
+            _stacked_init(gkeys[i], n_rep,
+                          lambda k, kind=pat[i]: blocks.init_block(
+                              k, cfg, kind, dtype, cross=cross))
+            for i in range(len(pat))
+        ]
+        params["tail_layers"] = [
+            blocks.init_block(gkeys[len(pat) + i], cfg, pat[i % len(pat)],
+                              dtype, cross=cross)
+            for i in range(rem)
+        ]
+    if cfg.is_encoder_decoder:
+        params["enc_layers"] = _stacked_init(
+            keys[5], cfg.num_encoder_layers,
+            lambda k: blocks.init_block(k, cfg, "attn", dtype, cross=False))
+        params["enc_norm"] = layers.init_norm(keys[6], d, cfg.norm, dtype)
+    return params
+
+
+def _embed_tokens(params, tokens, cfg: ModelConfig):
+    x = params["embed"][tokens]
+    if cfg.pos_embedding == "learned":
+        S = tokens.shape[1]
+        pos = jnp.arange(S) % MAX_LEARNED_POS
+        x = x + params["pos_embed"][pos][None]
+    return x
+
+
+def remat_policy(cfg: ModelConfig):
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    if cfg.remat_policy == "names":
+        # selective remat: save the two per-layer TP-boundary tensors so the
+        # backward recompute never re-runs their collectives
+        return jax.checkpoint_policies.save_only_these_names(
+            "mixer_out", "mlp_out")
+    return None  # save nothing: full recompute
+
+
+def _scan_stack(stacked, x, cfg: ModelConfig, kind: str, *, causal=True,
+                window=None, enc_out=None, remat: bool = True):
+    def body(carry, layer_params):
+        h, aux = carry
+        h, a = blocks.block_forward(layer_params, h, cfg, kind, causal=causal,
+                                    window=window, enc_out=enc_out)
+        if cfg.seq_parallel:
+            h = constrain(h, "data", "model", None)
+        else:
+            h = constrain(h, "data", None, None)
+        return (h, aux + a), None
+
+    body_fn = jax.checkpoint(body, policy=remat_policy(cfg)) if remat \
+        else body
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
+                               stacked)
+    return x, aux
+
+
+def _decoder_window(cfg: ModelConfig, mode: str) -> Optional[int]:
+    if cfg.sliding_window is not None:
+        return cfg.sliding_window
+    if mode == "long":
+        return cfg.long_context_window
+    return None
+
+
+def forward(params, batch: Dict[str, Array], cfg: ModelConfig, *,
+            mode: str = "train") -> tuple[Array, Array]:
+    """Returns (logits (B, S, V), aux_loss).
+
+    batch keys: "tokens" (B, S_text); optional "media" (B, F, d) for
+    vlm/audio decoder-only; optional "enc_media" (B, F, d) for enc-dec.
+    ``mode``: "train" | "prefill" | "long" (sliding-window fallback).
+    """
+    tokens = batch["tokens"]
+    x = _embed_tokens(params, tokens, cfg)
+    if cfg.frontend == "vision" and "media" in batch:
+        x = jnp.concatenate([batch["media"].astype(x.dtype), x], axis=1)
+    x = constrain(x, "data", None, None)
+    window = _decoder_window(cfg, mode)
+
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_x = batch["enc_media"].astype(x.dtype)
+        enc_out, _ = _scan_stack(params["enc_layers"], enc_x, cfg, "attn",
+                                 causal=False, window=None)
+        enc_out = layers.apply_norm(enc_out, params["enc_norm"], cfg.norm)
+
+    kinds = blocks.block_kinds(cfg)
+    aux = jnp.zeros((), jnp.float32)
+    if "layers" in params:
+        x, aux = _scan_stack(params["layers"], x, cfg, kinds[0],
+                             causal=True, window=window, enc_out=enc_out)
+    else:
+        pat = cfg.block_pattern
+        n_rep = cfg.num_layers // len(pat)
+
+        def pattern_body(carry, per_pattern):
+            h, a = carry
+            for i, kind in enumerate(pat):
+                h, ai = blocks.block_forward(per_pattern[i], h, cfg, kind,
+                                             causal=True,
+                                             window=window if kind == "attn"
+                                             else None,
+                                             enc_out=enc_out)
+                a = a + ai
+            return (h, a), None
+
+        (x, aux), _ = jax.lax.scan(
+            jax.checkpoint(pattern_body, policy=remat_policy(cfg)),
+            (x, aux), tuple(params["pattern_layers"]))
+        for i, lp in enumerate(params["tail_layers"]):
+            kind = pat[i % len(pat)]
+            x, ai = blocks.block_forward(lp, x, cfg, kind, causal=True,
+                                         window=window if kind == "attn"
+                                         else None, enc_out=enc_out)
+            aux = aux + ai
+
+    x = layers.apply_norm(x, params["final_norm"], cfg.norm)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    # only score the text positions (media prefix is input-only)
+    if cfg.frontend == "vision" and "media" in batch:
+        x = x[:, batch["media"].shape[1]:]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    logits = constrain(logits, "data", None, "model")
+    return logits, aux
+
+
+def loss_fn(params, batch: Dict[str, Array], cfg: ModelConfig, *,
+            mode: str = "train", aux_weight: float = 0.01):
+    """Next-token cross entropy (+ MoE load-balance aux)."""
+    logits, aux = forward(params, batch, cfg, mode=mode)
+    labels = batch["labels"]
+    V = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    mask = (labels >= 0).astype(jnp.float32)
+    labels_safe = jnp.maximum(labels, 0)
+    # gold logit via iota-mask reduction (NOT take_along_axis: a gather over
+    # the vocab-sharded axis would force GSPMD to replicate full-vocab logits)
+    v_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+    gold = jnp.sum(jnp.where(v_iota == labels_safe[..., None], logits, 0.0),
+                   axis=-1)
+    ce = jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return ce + aux_weight * aux
+
+
+# ---------------------------------------------------------------------------
+# Decoding (serve_step)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               mode: str = "decode") -> Dict[str, Any]:
+    """Decode state.  In "long" mode (or with an always-on sliding window)
+    attention caches are ring buffers of size window — O(window) memory."""
+    dtype = _dtype(cfg)
+    kinds = blocks.block_kinds(cfg)
+    window = _decoder_window(cfg, "long" if mode == "long" else "decode")
+    cache: Dict[str, Any] = {}
+    if len(set(kinds)) == 1:
+        one = lambda: blocks.init_block_cache(cfg, kinds[0], batch,
+                                              max_len, dtype, window=window)
+        cache["layers"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.num_layers, *x.shape)), one())
+    else:
+        pat = cfg.block_pattern
+        n_rep, rem = divmod(cfg.num_layers, len(pat))
+        cache["pattern_layers"] = [
+            jax.tree.map(lambda x: jnp.broadcast_to(x, (n_rep, *x.shape)),
+                         blocks.init_block_cache(cfg, kind, batch,
+                                                 max_len, dtype,
+                                                 window=window))
+            for kind in pat
+        ]
+        cache["tail_layers"] = [
+            blocks.init_block_cache(cfg, pat[i % len(pat)], batch, max_len,
+                                    dtype, window=window)
+            for i in range(rem)
+        ]
+    if cfg.is_encoder_decoder:
+        # fixed per-decoder-layer encoder KV, projected at prefill
+        F = cfg.frontend_len or 128
+        L = cfg.num_layers
+        cache["cross_kv"] = {
+            "k": jnp.zeros((L, batch, F, cfg.num_kv_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((L, batch, F, cfg.num_kv_heads, cfg.head_dim), dtype),
+        }
+    return cache
+
+
+def build_cross_cache(params, enc_media: Array, cfg: ModelConfig) -> dict:
+    """Run the encoder and project per-decoder-layer cross K/V (prefill)."""
+    enc_out, _ = _scan_stack(params["enc_layers"], enc_media, cfg, "attn",
+                             causal=False, window=None, remat=False)
+    enc_out = layers.apply_norm(enc_out, params["enc_norm"], cfg.norm)
+    B, F = enc_out.shape[:2]
+    KV, D = cfg.num_kv_heads, cfg.head_dim
+
+    def project(layer_params):
+        cp = layer_params["cross"]
+        k = jnp.einsum("bfd,da->bfa", enc_out, cp["wk"])
+        v = jnp.einsum("bfd,da->bfa", enc_out, cp["wv"])
+        if cfg.attn_bias:
+            k, v = k + cp["bk"], v + cp["bv"]
+        return {"k": k.reshape(B, F, KV, D), "v": v.reshape(B, F, KV, D)}
+
+    return jax.vmap(project)(params["layers"])
+
+
+def decode_step(params, cache: Dict[str, Any], token: Array, pos: Array,
+                cfg: ModelConfig, *, mode: str = "decode"):
+    """One-token serve step.
+
+    token: (B,) int32 current token ids; pos: scalar int32 position.
+    Returns (logits (B, V), new cache).
+    """
+    x = params["embed"][token][:, None, :]               # (B, 1, d)
+    if cfg.pos_embedding == "learned":
+        pos_b = jnp.broadcast_to(jnp.atleast_1d(pos), (token.shape[0],))
+        x = x + params["pos_embed"][pos_b % MAX_LEARNED_POS][:, None]
+    window = _decoder_window(cfg, "long" if mode == "long" else "decode")
+    cross_kv = cache.get("cross_kv")
+    kinds = blocks.block_kinds(cfg)
+
+    if "layers" in cache:
+        def body(carry, xs):
+            h = carry
+            layer_params, layer_cache, layer_cross = xs
+            h, new_cache = blocks.block_decode(
+                layer_params, h, layer_cache, pos, cfg, kinds[0],
+                window=window, cross_kv=layer_cross)
+            return h, new_cache
+
+        x, new_layer_caches = jax.lax.scan(
+            body, x, (params["layers"], cache["layers"], cross_kv))
+        new_cache = dict(cache)
+        new_cache["layers"] = new_layer_caches
+    else:
+        pat = cfg.block_pattern
+        new_cache = dict(cache)
+        new_pattern = []
+
+        def pat_body(carry, xs):
+            h = carry
+            lp, lc = xs
+            outs = []
+            for i, kind in enumerate(pat):
+                h, nc = blocks.block_decode(
+                    lp[i], h, lc[i], pos, cfg, kind,
+                    window=window if kind == "attn" else None,
+                    cross_kv=cross_kv)
+                outs.append(nc)
+            return h, tuple(outs)
+
+        x, new_pattern = jax.lax.scan(
+            pat_body, x,
+            (tuple(params["pattern_layers"]), tuple(cache["pattern_layers"])))
+        new_cache["pattern_layers"] = list(new_pattern)
+        new_tail = []
+        for i, (lp, lc) in enumerate(zip(params["tail_layers"],
+                                         cache["tail_layers"])):
+            kind = pat[i % len(pat)]
+            x, nc = blocks.block_decode(lp, x, lc, pos, cfg, kind,
+                                        window=window if kind == "attn"
+                                        else None, cross_kv=cross_kv)
+            new_tail.append(nc)
+        new_cache["tail_layers"] = new_tail
+
+    x = layers.apply_norm(x, params["final_norm"], cfg.norm)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)[:, 0]
+    return logits, new_cache

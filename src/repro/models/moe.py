@@ -1,0 +1,103 @@
+"""Mixture-of-experts block (granite-moe family): top-k router + SwiGLU
+experts, with two routing execution paths:
+
+- "dense":  every expert runs on every token, masked combine.  Exact, always
+  lowers under GSPMD, used as oracle and as the guaranteed dry-run path.
+  Compute overhead = num_experts / top_k (recorded in the roofline's
+  MODEL_FLOPS/HLO_FLOPS ratio).
+- "scatter": capacity-based dispatch (GShard-style) via scatter-add.  Exact
+  FLOPs (up to capacity drops); preferred on real hardware.
+
+The router runs in fp32; an auxiliary load-balance loss (Switch-style) is
+returned for the training objective.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> dict:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": layers.dense_init(ks[0], (d, E), jnp.float32),
+        "w_gate": layers.dense_init(ks[1], (E, d, f), dtype),
+        "w_up": layers.dense_init(ks[2], (E, d, f), dtype),
+        "w_down": layers.dense_init(ks[3], (E, f, d), dtype),
+    }
+
+
+def _route(params, x2, cfg: ModelConfig):
+    """x2: (T, d) -> (gates (T,k), idx (T,k), aux_loss scalar)."""
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+    logits = jnp.einsum("td,de->te", x2.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)
+    gates = gates / (jnp.sum(gates, axis=-1, keepdims=True) + 1e-9)
+    # Switch aux loss: E * sum_e (frac tokens to e) * (mean router prob e)
+    onehot = jax.nn.one_hot(idx[:, 0], E, dtype=jnp.float32)
+    frac = jnp.mean(onehot, axis=0)
+    imp = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(frac * imp)
+    return gates, idx, aux
+
+
+def _expert_ffn(xe, params):
+    """xe: (E, C, d) batched per-expert SwiGLU."""
+    g = jnp.einsum("ecd,edf->ecf", xe, params["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", xe, params["w_up"])
+    return jnp.einsum("ecf,efd->ecd", layers.silu(g) * u, params["w_down"])
+
+
+def moe_forward_dense(params, x, cfg: ModelConfig):
+    B, S, d = x.shape
+    T = B * S
+    x2 = x.reshape(T, d)
+    gates, idx, aux = _route(params, x2, cfg)
+    E = cfg.num_experts
+    # combine weights (T, E)
+    comb = jnp.zeros((T, E), jnp.float32)
+    comb = jnp.sum(jax.nn.one_hot(idx, E, dtype=jnp.float32)
+                   * gates[..., None], axis=1)
+    g = jnp.einsum("td,edf->tef", x2, params["w_gate"])
+    u = jnp.einsum("td,edf->tef", x2, params["w_up"])
+    h = layers.silu(g) * u
+    y = jnp.einsum("te,tef,efd->td", comb.astype(x.dtype), h, params["w_down"])
+    return y.reshape(B, S, d), aux
+
+
+def moe_forward_scatter(params, x, cfg: ModelConfig):
+    B, S, d = x.shape
+    T = B * S
+    k, E = cfg.num_experts_per_tok, cfg.num_experts
+    C = int(cfg.moe_capacity_factor * T * k / E) + 1
+    x2 = x.reshape(T, d)
+    gates, idx, aux = _route(params, x2, cfg)
+
+    flat_e = idx.reshape(T * k)
+    tok_id = jnp.repeat(jnp.arange(T), k)
+    flat_g = gates.reshape(T * k)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)       # (T*k, E)
+    slot = (jnp.cumsum(onehot, axis=0) - onehot)
+    slot = jnp.sum(slot * onehot, axis=-1)                     # (T*k,)
+    keep = slot < C
+    slot = jnp.where(keep, slot, C - 1)
+
+    xe = jnp.zeros((E, C, d), x.dtype)
+    xe = xe.at[flat_e, slot].add(jnp.where(keep[:, None], x2[tok_id], 0))
+    ye = _expert_ffn(xe, params)                               # (E, C, d)
+    contrib = ye[flat_e, slot] * (flat_g * keep)[:, None].astype(x.dtype)
+    y = jnp.zeros((T, d), x.dtype).at[tok_id].add(contrib)
+    return y.reshape(B, S, d), aux
+
+
+def moe_forward(params, x, cfg: ModelConfig):
+    if cfg.moe_routing == "scatter":
+        return moe_forward_scatter(params, x, cfg)
+    return moe_forward_dense(params, x, cfg)

@@ -1,0 +1,195 @@
+"""Block prefill: one full-sequence forward that ALSO seeds the decode cache
+(per-layer ring K/V, SSM states, RG-LRU states, enc-dec cross K/V), so
+serving pays one forward for the prompt instead of len(prompt) decode steps.
+
+Ring placement: decode writes slot = pos %% cache_len, so after prefilling
+positions [0, S) the slot s must hold the LARGEST position p ≡ s (mod L),
+p < S — a pure gather `p(s) = S-1 - ((S-1-s) mod L)` (no duplicate-index
+scatter).  Consistency with pure-decode is tested for every family.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, blocks, layers, ssm, rglru
+from repro.models.config import ModelConfig
+from repro.models.model import (MAX_LEARNED_POS, _decoder_window,
+                                _embed_tokens, build_cross_cache)
+
+Array = jax.Array
+
+
+def _ring_fill(kv_seq: Array, cache_len: int) -> Array:
+    """kv_seq: (B, S, KV, D) -> ring cache (B, cache_len, KV, D)."""
+    S = kv_seq.shape[1]
+    if S >= cache_len:
+        s_idx = jnp.arange(cache_len)
+        p = (S - 1) - ((S - 1 - s_idx) % cache_len)
+        return kv_seq[:, p]
+    pad = cache_len - S
+    return jnp.pad(kv_seq, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+
+def _attn_prefill(params, x, cfg: ModelConfig, *, window, cache_len,
+                  enc_out=None):
+    """Attention block forward that also returns the seeded ring cache."""
+    B, S, _ = x.shape
+    pos = jnp.arange(S)
+    q, k, v = attention._project_qkv(params, x, x, cfg, rope=True,
+                                     q_positions=pos, k_positions=pos)
+    out = attention._attend(q, k, v, pos, pos, causal=True, window=window)
+    out = jnp.einsum("bsa,ad->bsd", out.reshape(B, S, -1), params["wo"])
+    cache = {"k": _ring_fill(k.astype(x.dtype), cache_len),
+             "v": _ring_fill(v.astype(x.dtype), cache_len)}
+    return out, cache
+
+
+def _ssm_prefill(params, u, cfg: ModelConfig):
+    """Mamba forward that also returns (conv state, ssm state)."""
+    Bsz, S, _ = u.shape
+    di, n, nh, hd = (cfg.ssm_dinner, cfg.ssm_state, cfg.ssm_nheads,
+                     cfg.ssm_headdim)
+    zxbcdt = jnp.einsum("bsd,dz->bsz", u, params["in_proj"])
+    z, xbc, dt = ssm._split_proj(zxbcdt, cfg)
+    conv_state = _last_rows(xbc, cfg.conv_width - 1)
+    xbc = ssm._causal_conv(xbc, params["conv_w"], params["conv_b"])
+    x = xbc[..., :di].reshape(Bsz, S, nh, hd)
+    Bmat = xbc[..., di:di + n]
+    Cmat = xbc[..., di + n:di + 2 * n]
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    chunk = min(cfg.ssm_chunk, S)
+    while S % chunk:
+        chunk -= 1
+    y, final = ssm.ssd_chunked(x, dtv, A, Bmat, Cmat, chunk, D=params["D"])
+    y = y.reshape(Bsz, S, di)
+    y = layers.rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                       params["norm_scale"])
+    out = jnp.einsum("bsi,id->bsd", y, params["out_proj"])
+    return out, {"conv": conv_state, "ssm": final}
+
+
+def _rec_prefill(params, x, cfg: ModelConfig):
+    rec = jnp.einsum("bsd,dw->bsw", x, params["w_rec_in"])
+    gate = layers.gelu(jnp.einsum("bsd,dw->bsw", x, params["w_gate_in"]))
+    conv_state = _last_rows(rec, cfg.conv_width - 1)
+    W = params["conv_w"].shape[0]
+    rp = jnp.pad(rec, ((0, 0), (W - 1, 0), (0, 0)))
+    conv = jax.lax.conv_general_dilated(
+        rp.astype(jnp.float32), params["conv_w"][:, None, :].astype(jnp.float32),
+        (1,), "VALID", dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=rec.shape[-1]) + params["conv_b"].astype(jnp.float32)
+    h_seq, h_last = rglru.rglru_scan(params, conv.astype(x.dtype))
+    y = gate * h_seq.astype(x.dtype)
+    out = jnp.einsum("bsw,wd->bsd", y, params["w_out"])
+    return out, {"conv": conv_state, "h": h_last}
+
+
+def _last_rows(t: Array, n: int) -> Array:
+    """Last n rows along axis 1, left-zero-padded if the seq is shorter."""
+    S = t.shape[1]
+    if S >= n:
+        return t[:, S - n:]
+    return jnp.pad(t, ((0, 0), (n - S, 0), (0, 0)))
+
+
+def _block_prefill(params, x, cfg: ModelConfig, kind: str, *, window,
+                   cache_len, enc_out=None):
+    h = layers.apply_norm(x, params["ln1"], cfg.norm)
+    if kind == "ssm":
+        y, cache = _ssm_prefill(params["mixer"], h, cfg)
+        return x + y, cache
+    if kind == "rec":
+        y, cache = _rec_prefill(params["mixer"], h, cfg)
+        x = x + y
+    else:
+        y, cache = _attn_prefill(params["attn"], h, cfg, window=window,
+                                 cache_len=cache_len)
+        x = x + y
+    if enc_out is not None:
+        hc = layers.apply_norm(x, params["ln_cross"], cfg.norm)
+        x = x + attention.attention_forward(params["cross"], hc, cfg,
+                                            causal=False, kv_x=enc_out)
+    h2 = layers.apply_norm(x, params["ln2"], cfg.norm)
+    if kind == "moe":
+        from repro.models import moe
+        y2, _ = moe.moe_forward(params["moe"], h2, cfg)
+        x = x + y2
+    else:
+        from repro.models import mlp
+        x = x + mlp.mlp_forward(params["mlp"], h2, cfg)
+    return x, cache
+
+
+def prefill(params, batch: Dict[str, Array], cfg: ModelConfig,
+            max_len: int, mode: str = "decode"
+            ) -> Tuple[Array, Dict, Array]:
+    """Run the prompt in ONE forward and seed the decode cache.
+
+    Returns (logits (B, S, V), cache, next_pos scalar).
+    """
+    from repro.models import model as M
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = _embed_tokens(params, tokens, cfg)
+    window = _decoder_window(cfg, "long" if mode == "long" else "decode")
+    kinds = blocks.block_kinds(cfg)
+    enc_out = None
+    cache = M.init_cache(cfg, B, max_len, mode)
+    if cfg.is_encoder_decoder:
+        cache["cross_kv"] = build_cross_cache(params, batch["enc_media"], cfg)
+        enc_x = batch["enc_media"].astype(x.dtype)
+        enc_out, _ = M._scan_stack(params["enc_layers"], enc_x, cfg, "attn",
+                                   causal=False, window=None, remat=False)
+        enc_out = layers.apply_norm(enc_out, params["enc_norm"], cfg.norm)
+
+    def layer_params(i):
+        if "layers" in params:
+            return jax.tree.map(lambda t: t[i], params["layers"]), kinds[i]
+        pat = cfg.block_pattern
+        n_rep = cfg.num_layers // len(pat)
+        if i < n_rep * len(pat):
+            g, j = divmod(i, len(pat))
+            return (jax.tree.map(lambda t: t[g], params["pattern_layers"][j]),
+                    pat[j])
+        return params["tail_layers"][i - n_rep * len(pat)], \
+            pat[i % len(pat)]
+
+    new_entries = []
+    for i in range(cfg.num_layers):
+        lp, kind = layer_params(i)
+        cl = _cache_len(cfg, kind, max_len, window)
+        x, entry = _block_prefill(lp, x, cfg, kind, window=window,
+                                  cache_len=cl, enc_out=enc_out)
+        new_entries.append((kind, entry))
+
+    # repack entries into the init_cache layout
+    if "layers" in params:
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
+                               *[e for _, e in new_entries])
+        cache["layers"] = stacked
+    else:
+        pat = cfg.block_pattern
+        n_rep = cfg.num_layers // len(pat)
+        for j in range(len(pat)):
+            per = [new_entries[g * len(pat) + j][1] for g in range(n_rep)]
+            cache["pattern_layers"][j] = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *per)
+        for t in range(cfg.num_layers - n_rep * len(pat)):
+            cache["tail_layers"][t] = new_entries[n_rep * len(pat) + t][1]
+
+    x = layers.apply_norm(x, params["final_norm"], cfg.norm)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    return logits, cache, jnp.asarray(S, jnp.int32)
+
+
+def _cache_len(cfg: ModelConfig, kind: str, max_len: int,
+               window) -> int:
+    if kind != "attn" and kind != "moe":
+        pass
+    eff = min(max_len, window) if window else max_len
+    return eff

@@ -1,0 +1,108 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma — arXiv:2402.19427).
+
+Recurrence (per channel):
+    r_t = sigmoid(x_t W_a + b_a)                    (recurrence gate)
+    i_t = sigmoid(x_t W_x + b_x)                    (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t)          (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Prefill uses ``jax.lax.associative_scan`` over the (a, b) linear-recurrence
+monoid — O(log S) depth, which is what makes `long_500k` native here.
+The block wraps the recurrence Griffin-style:
+    y = W_out[ GeLU(x W_g) * RGLRU(conv4(x W_r)) ]
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+_C = 8.0
+
+
+def init_rglru_block(key, cfg: ModelConfig, dtype) -> dict:
+    d, w = cfg.d_model, cfg.lru_width
+    ks = jax.random.split(key, 6)
+    return {
+        "w_rec_in": layers.dense_init(ks[0], (d, w), dtype),
+        "w_gate_in": layers.dense_init(ks[1], (d, w), dtype),
+        "w_out": layers.dense_init(ks[2], (w, d), dtype),
+        "conv_w": layers.dense_init(ks[3], (cfg.conv_width, w), dtype, 0.2),
+        "conv_b": jnp.zeros((w,), dtype),
+        "wa": layers.dense_init(ks[4], (w, w), dtype),
+        "ba": jnp.zeros((w,), jnp.float32),
+        "wx": layers.dense_init(ks[5], (w, w), dtype),
+        "bx": jnp.zeros((w,), jnp.float32),
+        # Lambda init so that a in (0.9, 0.999) at r=1 (Griffin appendix)
+        "lam": jnp.linspace(-4.0, -1.0, w).astype(jnp.float32),
+    }
+
+
+def _gates(params, x: Array):
+    """x: (..., w) -> log_a (<0), gated input b (fp32)."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ params["wa"].astype(jnp.float32) + params["ba"])
+    i = jax.nn.sigmoid(xf @ params["wx"].astype(jnp.float32) + params["bx"])
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r
+    a2 = jnp.exp(2.0 * log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-12)) * (i * xf)
+    return log_a, b
+
+
+def rglru_scan(params, x: Array, init_h: Array | None = None) -> tuple[Array, Array]:
+    """x: (B, S, w) -> (h_seq (B, S, w) fp32, final h (B, w))."""
+    log_a, b = _gates(params, x)
+    a = jnp.exp(log_a)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    a_s, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    if init_h is not None:
+        # fold the carried state into every prefix: h_t += (prod a_1..t) h_0
+        h = h + a_s * init_h[:, None, :]
+    return h, h[:, -1]
+
+
+def rglru_block_forward(params, x: Array, cfg: ModelConfig) -> Array:
+    """Griffin recurrent block.  x: (B, S, d) -> (B, S, d)."""
+    rec = jnp.einsum("bsd,dw->bsw", x, params["w_rec_in"])
+    gate = layers.gelu(jnp.einsum("bsd,dw->bsw", x, params["w_gate_in"]))
+    # causal depthwise conv (width 4)
+    W = params["conv_w"].shape[0]
+    rp = jnp.pad(rec, ((0, 0), (W - 1, 0), (0, 0)))
+    conv = jax.lax.conv_general_dilated(
+        rp.astype(jnp.float32), params["conv_w"][:, None, :].astype(jnp.float32),
+        (1,), "VALID", dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=rec.shape[-1]) + params["conv_b"].astype(jnp.float32)
+    h, _ = rglru_scan(params, conv.astype(x.dtype))
+    y = gate * h.astype(x.dtype)
+    return jnp.einsum("bsw,wd->bsd", y, params["w_out"])
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.lru_width), dtype),
+        "h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+    }
+
+
+def rglru_block_decode(params, x1: Array, cache: dict, cfg: ModelConfig):
+    """One-token step.  x1: (B, 1, d)."""
+    rec = jnp.einsum("bsd,dw->bsw", x1, params["w_rec_in"])
+    gate = layers.gelu(jnp.einsum("bsd,dw->bsw", x1, params["w_gate_in"]))
+    hist = jnp.concatenate([cache["conv"], rec], axis=1)     # (B, W, w)
+    conv = jnp.einsum("bwc,wc->bc", hist.astype(jnp.float32),
+                      params["conv_w"].astype(jnp.float32)) + \
+        params["conv_b"].astype(jnp.float32)
+    log_a, b = _gates(params, conv[:, None, :].astype(x1.dtype))
+    a = jnp.exp(log_a[:, 0])
+    h = a * cache["h"] + b[:, 0]
+    y = gate * h[:, None, :].astype(x1.dtype)
+    out = jnp.einsum("bsw,wd->bsd", y, params["w_out"])
+    return out, {"conv": hist[:, 1:], "h": h}

@@ -1,0 +1,217 @@
+"""Mamba-2 (SSD, state-space duality) block — arXiv:2405.21060.
+
+Prefill/train uses the chunked SSD algorithm (quadratic intra-chunk,
+linear inter-chunk recurrence); decode carries a (B, nheads, headdim, state)
+SSM state — O(1) memory in sequence length, which is what makes the
+``long_500k`` shape native for this architecture.
+
+Oracle for tests: ``ssd_naive`` (direct recurrence).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+def init_mamba(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    di, n, nh = cfg.ssm_dinner, cfg.ssm_state, cfg.ssm_nheads
+    g = cfg.ssm_groups
+    zdim = 2 * di + 2 * g * n + nh
+    conv_ch = di + 2 * g * n
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": layers.dense_init(ks[0], (d, zdim), dtype),
+        "conv_w": layers.dense_init(ks[1], (cfg.conv_width, conv_ch), dtype, 0.2),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm_scale": jnp.zeros((di,), dtype),
+        "out_proj": layers.dense_init(ks[2], (di, d), dtype),
+    }
+
+
+def _segsum(a: Array) -> Array:
+    """a: (..., l, h) -> (..., h, l, l) lower-triangular segment sums
+    T[i,j] = sum_{j < k <= i} a_k (and -inf above the diagonal)."""
+    l = a.shape[-2]
+    a = jnp.moveaxis(a, -1, -2)                     # (..., h, l)
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]       # T[i,j] = cs_i - cs_j
+    mask = jnp.tril(jnp.ones((l, l), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: Array, dt: Array, A: Array, B: Array, C: Array,
+                chunk: int, D: Optional[Array] = None,
+                init_state: Optional[Array] = None
+                ) -> Tuple[Array, Array]:
+    """Chunked SSD.
+
+    x: (b, s, h, p); dt: (b, s, h) (already softplus'd, >0); A: (h,) (<0);
+    B, C: (b, s, n) (single group, broadcast over heads).
+    Returns (y: (b, s, h, p), final_state: (b, h, p, n)).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    c, l = s // chunk, chunk
+    xf = x.astype(jnp.float32)
+    x_dt = xf * dt[..., None]                       # input scaled by dt
+    A_dt = (A[None, None, :] * dt)                  # (b, s, h)
+
+    def ch(t):  # (b, s, ...) -> (b, c, l, ...)
+        return t.reshape(b, c, l, *t.shape[2:])
+
+    x_c, Adt_c = ch(x_dt), ch(A_dt)
+    B_c, C_c = ch(B.astype(jnp.float32)), ch(C.astype(jnp.float32))
+    A_cum = jnp.cumsum(Adt_c, axis=2)               # (b, c, l, h)
+
+    # intra-chunk (quadratic, "attention-like" dual form)
+    L = jnp.exp(_segsum(Adt_c))                     # (b, c, h, l, l)
+    Y_diag = jnp.einsum("bcln,bcsn,bchls,bcshp->bclhp", C_c, B_c, L, x_c)
+
+    # per-chunk input states
+    decay_states = jnp.exp(A_cum[:, :, -1:, :] - A_cum)        # (b, c, l, h)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn", B_c, decay_states, x_c)
+
+    # inter-chunk recurrence (scan over chunk index)
+    chunk_decay = jnp.exp(A_cum[:, :, -1, :])        # (b, c, h)
+    s0 = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def body(prev, inp):
+        dec, st = inp                                # (b, h), (b, h, p, n)
+        new = prev * dec[..., None, None] + st
+        return new, prev
+
+    final, prev_states = jax.lax.scan(
+        body, s0, (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(states, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)    # (b, c, h, p, n)
+
+    decay_out = jnp.exp(A_cum)                       # (b, c, l, h)
+    Y_off = jnp.einsum("bcln,bchpn,bclh->bclhp", C_c, prev_states, decay_out)
+
+    y = (Y_diag + Y_off).reshape(b, s, h, p)
+    if D is not None:
+        y = y + D[None, None, :, None] * xf
+    return y.astype(x.dtype), final
+
+
+def ssd_naive(x, dt, A, B, C, D=None, init_state=None):
+    """Direct recurrence oracle.  Same shapes as ssd_chunked."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    xf = x.astype(jnp.float32)
+    s0 = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def body(state, inp):
+        xt, dtt, Bt, Ct = inp                        # (b,h,p) (b,h) (b,n) (b,n)
+        da = jnp.exp(A[None] * dtt)                  # (b,h)
+        state = (state * da[..., None, None]
+                 + (dtt[..., None] * xt)[..., None] * Bt[:, None, None, :])
+        yt = jnp.einsum("bhpn,bn->bhp", state, Ct)
+        return state, yt
+
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(B.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(C.astype(jnp.float32), 1, 0))
+    final, ys = jax.lax.scan(body, s0, xs)
+    y = jnp.moveaxis(ys, 0, 1)
+    if D is not None:
+        y = y + D[None, None, :, None] * xf
+    return y.astype(x.dtype), final
+
+
+def _causal_conv(u: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv.  u: (B, S, C), w: (W, C)."""
+    W = w.shape[0]
+    up = jnp.pad(u, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        up.astype(jnp.float32),
+        w[:, None, :].astype(jnp.float32),           # (W, 1, C)
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=u.shape[-1])
+    return (jax.nn.silu(out + b.astype(jnp.float32))).astype(u.dtype)
+
+
+def _split_proj(zxbcdt, cfg: ModelConfig):
+    di, n, nh, g = (cfg.ssm_dinner, cfg.ssm_state, cfg.ssm_nheads,
+                    cfg.ssm_groups)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * g * n]
+    dt = zxbcdt[..., di + di + 2 * g * n:]
+    return z, xbc, dt
+
+
+def mamba_forward(params, u: Array, cfg: ModelConfig) -> Array:
+    """Full-sequence Mamba-2 mixer.  u: (B, S, d) -> (B, S, d)."""
+    Bsz, S, d = u.shape
+    di, n, nh = cfg.ssm_dinner, cfg.ssm_state, cfg.ssm_nheads
+    hd = cfg.ssm_headdim
+    zxbcdt = jnp.einsum("bsd,dz->bsz", u, params["in_proj"])
+    z, xbc, dt = _split_proj(zxbcdt, cfg)
+    xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    x = xbc[..., :di].reshape(Bsz, S, nh, hd)
+    Bmat = xbc[..., di:di + n]
+    Cmat = xbc[..., di + n:di + 2 * n]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    chunk = min(cfg.ssm_chunk, S)
+    while S % chunk:
+        chunk -= 1
+    y, _ = ssd_chunked(x, dt, A, Bmat, Cmat, chunk, D=params["D"])
+    y = y.reshape(Bsz, S, di)
+    y = layers.rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                       params["norm_scale"])
+    return jnp.einsum("bsi,id->bsd", y, params["out_proj"])
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    di, n, nh = cfg.ssm_dinner, cfg.ssm_state, cfg.ssm_nheads
+    conv_ch = di + 2 * cfg.ssm_groups * n
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((batch, nh, cfg.ssm_headdim, n), jnp.float32),
+    }
+
+
+def mamba_decode(params, u1: Array, cache: dict, cfg: ModelConfig):
+    """One-token step.  u1: (B, 1, d)."""
+    Bsz = u1.shape[0]
+    di, n, nh, hd = cfg.ssm_dinner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+    zxbcdt = jnp.einsum("bsd,dz->bsz", u1, params["in_proj"])
+    z, xbc, dt = _split_proj(zxbcdt, cfg)
+    # conv with cached history
+    hist = jnp.concatenate([cache["conv"], xbc], axis=1)   # (B, W, C)
+    w = params["conv_w"]
+    conv_out = jnp.einsum("bwc,wc->bc", hist.astype(jnp.float32),
+                          w.astype(jnp.float32)) + params["conv_b"]
+    xbc1 = jax.nn.silu(conv_out)[:, None, :].astype(u1.dtype)
+    new_conv = hist[:, 1:]
+    x = xbc1[..., :di].reshape(Bsz, nh, hd)
+    Bmat = xbc1[..., 0, di:di + n]
+    Cmat = xbc1[..., 0, di + n:di + 2 * n]
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    da = jnp.exp(A[None] * dtv)                            # (B, nh)
+    state = cache["ssm"] * da[..., None, None] + \
+        (dtv[..., None] * x.astype(jnp.float32))[..., None] * \
+        Bmat.astype(jnp.float32)[:, None, None, :]
+    y = jnp.einsum("bhpn,bn->bhp", state, Cmat.astype(jnp.float32))
+    y = y + params["D"][None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(Bsz, 1, di).astype(u1.dtype)
+    y = layers.rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                       params["norm_scale"])
+    out = jnp.einsum("bsi,id->bsd", y, params["out_proj"])
+    return out, {"conv": new_conv, "ssm": state}

@@ -1,0 +1,149 @@
+"""Continuous-batching serve engine.
+
+Fixed decode slots over one shared ring cache; every slot advances at its
+own position (vector-pos `decode_step`), so new requests join the batch the
+moment a slot frees up — no drain-and-refill bubbles.  Prompts are prefilling
+through the decode path (one token/step); a block-prefill fast path is the
+natural next step on real hardware.
+
+Slot hygiene: on admission the slot's cache entries are zeroed host-side;
+correctness does not depend on it for attention (the ring mask k_pos<=pos
+already hides unwritten slots) but SSM/LRU states are carried state and must
+reset.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int = 16
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
+                 max_len: int = 256, eos_id: Optional[int] = None,
+                 block_prefill: bool = False):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.block_prefill = block_prefill
+        self.cache = model.init_cache(cfg, max_batch, max_len)
+        self.pos = np.zeros(max_batch, np.int32)
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.queue: deque = deque()
+        self.completed: Dict[int, Request] = {}
+        self._step = jax.jit(
+            lambda p, c, t, pos: model.decode_step(p, c, t, pos, cfg))
+
+    # -- public API ---------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def run(self, max_steps: int = 10_000) -> Dict[int, Request]:
+        steps = 0
+        while (any(self.slots) or self.queue) and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.completed
+
+    # -- engine internals ----------------------------------------------------
+
+    def _reset_slot_state(self, b: int) -> None:
+        def zero_b(leaf):
+            if leaf.ndim >= 1 and leaf.shape[0] == self.cfg.num_layers \
+                    and leaf.ndim >= 2 and leaf.shape[1] == self.max_batch:
+                return leaf.at[:, b].set(0)
+            if leaf.ndim >= 1 and leaf.shape[0] == self.max_batch:
+                return leaf.at[b].set(0)
+            return leaf
+
+        self.cache = jax.tree.map(zero_b, self.cache)
+
+    def _admit(self) -> None:
+        for b in range(self.max_batch):
+            if self.slots[b] is None and self.queue:
+                req = self.queue.popleft()
+                self.slots[b] = req
+                self.pos[b] = 0
+                self._reset_slot_state(b)
+                if self.block_prefill and len(req.prompt) > 1:
+                    self._prefill_slot(b, req)
+
+    def _prefill_slot(self, b: int, req: Request) -> None:
+        """Run the prompt (minus its last token) in ONE forward and splice
+        the resulting single-request cache into slot b."""
+        from repro.models.prefill import prefill
+        import jax.numpy as jnp
+        toks = np.asarray(req.prompt[:-1], np.int32)[None]
+        batch = {"tokens": jnp.asarray(toks),
+                 "labels": jnp.asarray(toks)}
+        _, solo_cache, pos = prefill(self.params, batch, self.cfg,
+                                     self.max_len)
+
+        def splice(full, solo):
+            if full.ndim >= 2 and full.shape[0] == self.cfg.num_layers \
+                    and full.shape[1] == self.max_batch:
+                return full.at[:, b].set(solo[:, 0])
+            if full.ndim >= 1 and full.shape[0] == self.max_batch:
+                return full.at[b].set(solo[0])
+            return full
+
+        self.cache = jax.tree.map(splice, self.cache, solo_cache)
+        self.pos[b] = len(req.prompt) - 1
+
+    def _current_tokens(self) -> np.ndarray:
+        toks = np.zeros(self.max_batch, np.int32)
+        for b, req in enumerate(self.slots):
+            if req is None:
+                continue
+            t = self.pos[b]
+            if t < len(req.prompt):
+                toks[b] = req.prompt[t]
+            else:
+                toks[b] = req.generated[-1]
+        return toks
+
+    def step(self) -> None:
+        self._admit()
+        if not any(self.slots):
+            return
+        toks = jnp.asarray(self._current_tokens())
+        pos = jnp.asarray(self.pos)
+        logits, self.cache = self._step(self.params, self.cache, toks, pos)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        for b, req in enumerate(self.slots):
+            if req is None:
+                continue
+            t = int(self.pos[b])
+            self.pos[b] = t + 1
+            if t >= len(req.prompt) - 1:           # prompt consumed -> sample
+                tok = int(nxt[b])
+                req.generated.append(tok)
+                hit_eos = self.eos_id is not None and tok == self.eos_id
+                if len(req.generated) >= req.max_new or hit_eos or \
+                        self.pos[b] >= self.max_len:
+                    req.done = True
+                    self.completed[req.rid] = req
+                    self.slots[b] = None
+
+    @property
+    def utilization(self) -> float:
+        return sum(s is not None for s in self.slots) / self.max_batch

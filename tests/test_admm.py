@@ -1,0 +1,118 @@
+"""Generalized ADMM (Algorithm 1) behaviour: linear convergence, consensus,
+agreement with the pooled optimum, support recovery (Theorems 1, 3, 4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ADMMConfig, decsvm_fit, generate, metrics,
+                        SimConfig, true_beta)
+from repro.core.admm import objective, soft_threshold, power_iteration_lmax
+from repro.core.baselines import pooled_csvm
+from repro.core.graph import erdos_renyi, ring
+
+
+@pytest.fixture(scope="module")
+def sim():
+    cfg = SimConfig(p=50, s=5, m=8, n=150, rho=0.5, p_flip=0.01)
+    X, y, bstar = generate(cfg, seed=7)
+    W = erdos_renyi(cfg.m, 0.5, seed=1)
+    return cfg, jnp.asarray(X), jnp.asarray(y), bstar, W
+
+
+def test_soft_threshold_properties():
+    v = jnp.linspace(-3, 3, 101)
+    out = soft_threshold(v, 0.5)
+    assert bool(jnp.all(jnp.sign(out) * jnp.sign(v) >= 0))
+    assert bool(jnp.all(jnp.abs(out) <= jnp.maximum(jnp.abs(v) - 0.5, 0) + 1e-7))
+    np.testing.assert_allclose(soft_threshold(v, 0.0), v, atol=1e-7)
+
+
+def test_power_iteration():
+    rng = np.random.default_rng(0)
+    X = jnp.asarray(rng.standard_normal((200, 30)), jnp.float32)
+    got = float(power_iteration_lmax(X))
+    want = float(np.linalg.eigvalsh(np.asarray(X).T @ np.asarray(X) / 200)[-1])
+    assert abs(got - want) / want < 1e-3
+
+
+def test_consensus_and_convergence(sim):
+    cfg, X, y, bstar, W = sim
+    acfg = ADMMConfig(lam=0.05, tau=1.0, h=0.25, max_iter=400)
+    B, hist = decsvm_fit(X, y, jnp.asarray(W), acfg, track_history=True)
+    B = np.asarray(B)
+    # consensus
+    assert metrics.consensus_gap(B) < 1e-3
+    # linear convergence: log distance-to-final decreases ~linearly
+    final = B.mean(axis=0)
+    errs = np.linalg.norm(np.asarray(hist) - final[None, None, :],
+                          axis=-1).mean(axis=1)
+    early = errs[10]
+    late = errs[-1]
+    assert late < early * 1e-3, (early, late)
+    # log-linear decay: each 100-iteration window shrinks the error
+    assert errs[200] < errs[100] < errs[10]
+
+
+def test_matches_pooled_optimum(sim):
+    """ADMM consensus solution minimizes the same objective as pooled FISTA."""
+    cfg, X, y, bstar, W = sim
+    acfg = ADMMConfig(lam=0.05, tau=1.0, h=0.25, max_iter=600)
+    B = decsvm_fit(X, y, jnp.asarray(W), acfg)
+    beta_admm = jnp.mean(B, axis=0)
+    Xp = X.reshape(-1, X.shape[-1])
+    yp = y.reshape(-1)
+    beta_pool = pooled_csvm(Xp, yp, acfg, max_iter=2000)
+    f_admm = float(objective(X, y, beta_admm, acfg))
+    f_pool = float(objective(X, y, beta_pool, acfg))
+    assert abs(f_admm - f_pool) < 5e-3 * max(1.0, abs(f_pool))
+
+
+def test_estimation_error_and_support(sim):
+    cfg, X, y, bstar, W = sim
+    lam = float(np.sqrt(np.log(cfg.p) / cfg.n_total)) * 1.5
+    acfg = ADMMConfig(lam=lam, tau=1.0, h=0.25, max_iter=400)
+    B = np.asarray(decsvm_fit(X, y, jnp.asarray(W), acfg))
+    err = metrics.estimation_error(B, bstar)
+    assert err < 0.5, err
+    f1 = metrics.mean_f1(B, bstar, tol=1e-3)
+    assert f1 > 0.7, f1
+
+
+@pytest.mark.parametrize("kernel", ["laplacian", "logistic", "gaussian",
+                                    "uniform", "epanechnikov"])
+def test_kernel_robustness(sim, kernel):
+    """Fig 1: stabilized error similar across kernels."""
+    cfg, X, y, bstar, W = sim
+    acfg = ADMMConfig(lam=0.05, tau=1.0, h=0.25, kernel=kernel, max_iter=300)
+    B = np.asarray(decsvm_fit(X, y, jnp.asarray(W), acfg))
+    err = metrics.estimation_error(B, bstar)
+    assert err < 0.6, (kernel, err)
+
+
+def test_topology_insensitivity(sim):
+    """Tables 3-4: ring vs dense graph converge to similar errors."""
+    cfg, X, y, bstar, W = sim
+    acfg = ADMMConfig(lam=0.05, max_iter=500)
+    B_er = np.asarray(decsvm_fit(X, y, jnp.asarray(W), acfg))
+    B_ring = np.asarray(decsvm_fit(X, y, jnp.asarray(ring(cfg.m)), acfg))
+    e1 = metrics.estimation_error(B_er, bstar)
+    e2 = metrics.estimation_error(B_ring, bstar)
+    assert abs(e1 - e2) < 0.15, (e1, e2)
+
+
+def test_elastic_net_variant(sim):
+    cfg, X, y, bstar, W = sim
+    acfg = ADMMConfig(lam=0.04, lam0=0.01, max_iter=300)
+    B = np.asarray(decsvm_fit(X, y, jnp.asarray(W), acfg))
+    assert np.isfinite(B).all()
+    assert metrics.estimation_error(B, bstar) < 0.6
+
+
+def test_warm_start_matches_cold(sim):
+    cfg, X, y, bstar, W = sim
+    acfg = ADMMConfig(lam=0.05, max_iter=400)
+    B_cold = np.asarray(decsvm_fit(X, y, jnp.asarray(W), acfg))
+    b0 = jnp.asarray(np.tile(bstar.astype(np.float32), (cfg.m, 1)))
+    B_warm = np.asarray(decsvm_fit(X, y, jnp.asarray(W), acfg, beta0=b0))
+    assert np.max(np.abs(B_cold - B_warm)) < 2e-2

@@ -1,0 +1,81 @@
+"""Baseline estimators (Section 4.1 competitors) + modified-BIC tuning."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ADMMConfig, decsvm_fit, generate, metrics, SimConfig
+from repro.core import baselines, tuning
+from repro.core.graph import erdos_renyi
+
+
+@pytest.fixture(scope="module")
+def sim():
+    cfg = SimConfig(p=40, s=5, m=6, n=150, rho=0.5)
+    X, y, bstar = generate(cfg, seed=11)
+    W = erdos_renyi(cfg.m, 0.6, seed=2)
+    return cfg, jnp.asarray(X), jnp.asarray(y), bstar, W
+
+
+def test_method_ordering(sim):
+    """Table 1 qualitative ordering: local worst; deCSVM ~ pooled."""
+    cfg, X, y, bstar, W = sim
+    acfg = ADMMConfig(lam=0.06, max_iter=400)
+    Xp, yp = X.reshape(-1, X.shape[-1]), y.reshape(-1)
+    e_pool = metrics.estimation_error(
+        np.asarray(baselines.pooled_csvm(Xp, yp, acfg, 1500))[None], bstar)
+    B_loc = baselines.local_csvm(X, y, acfg, 800)
+    e_loc = metrics.estimation_error(np.asarray(B_loc), bstar)
+    e_avg = metrics.estimation_error(
+        np.asarray(baselines.average_consensus(B_loc, W)), bstar)
+    e_de = metrics.estimation_error(
+        np.asarray(decsvm_fit(X, y, jnp.asarray(W), acfg)), bstar)
+    assert e_loc > e_pool
+    assert e_avg < e_loc          # averaging helps
+    assert e_de < e_loc           # deCSVM beats local
+    assert e_de < e_pool + 0.15   # and is near pooled
+
+
+def test_average_consensus_converges_to_mean(sim):
+    cfg, X, y, bstar, W = sim
+    B = jnp.asarray(np.random.default_rng(0).standard_normal((cfg.m, 41))
+                    .astype(np.float32))
+    out = np.asarray(baselines.average_consensus(B, W, rounds=400))
+    gap = np.max(np.abs(out - np.asarray(B).mean(0, keepdims=True)))
+    assert gap < 1e-4, gap
+
+
+def test_dsubgd_improves_over_zero(sim):
+    cfg, X, y, bstar, W = sim
+    B = np.asarray(baselines.d_subgd_fit(X, y, W, lam=0.05, max_iter=200))
+    e = metrics.estimation_error(B, bstar)
+    e0 = metrics.estimation_error(np.zeros_like(B), bstar)
+    assert e < e0
+
+
+def test_dsubgd_dense_vs_decsvm_sparse(sim):
+    """Table 6 qualitative: D-subGD support is dense; deCSVM is sparse."""
+    cfg, X, y, bstar, W = sim
+    acfg = ADMMConfig(lam=0.08, max_iter=300)
+    B_de = np.asarray(decsvm_fit(X, y, jnp.asarray(W), acfg))
+    B_sg = np.asarray(baselines.d_subgd_fit(X, y, W, lam=0.08, max_iter=200))
+    assert metrics.mean_support_size(B_sg, tol=1e-6) > \
+        2 * metrics.mean_support_size(B_de, tol=1e-6)
+
+
+def test_bic_lambda_selection(sim):
+    cfg, X, y, bstar, W = sim
+    lams = tuning.lambda_grid(np.asarray(X), np.asarray(y), num=6)
+    assert np.all(np.diff(lams) < 0)
+
+    def fit(lam):
+        acfg = ADMMConfig(lam=lam, max_iter=200)
+        return decsvm_fit(X, y, jnp.asarray(W), acfg)
+
+    best_lam, best_B, table = tuning.select_lambda(fit, np.asarray(X),
+                                                   np.asarray(y), lams)
+    assert best_lam is not None
+    # chosen model should recover support reasonably
+    f1 = metrics.mean_f1(np.asarray(best_B), bstar, tol=1e-3)
+    assert f1 > 0.5, (best_lam, f1)
+    # BIC should not pick the densest (smallest-lambda) model
+    assert best_lam > lams[-1]

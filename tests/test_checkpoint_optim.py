@@ -1,0 +1,49 @@
+"""Checkpointing roundtrip + optimizer behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as configs
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.models import model
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.optim.schedule import cosine_schedule, linear_warmup
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = configs.get_reduced("qwen3_14b")
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    save_checkpoint(tmp_path / "ck", {"params": params, "opt": opt}, step=7)
+    like = jax.eval_shape(lambda: {"params": params, "opt": opt})
+    restored, step = restore_checkpoint(tmp_path / "ck", like)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(restored["params"]),
+                    jax.tree.leaves(params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_adamw_descends_quadratic():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
+    params = {"w": jnp.array([5.0, -3.0])}
+    opt = adamw_init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, opt, gnorm = adamw_update(params, grads, opt, cfg)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 1e-2
+
+
+def test_adamw_grad_clip():
+    cfg = AdamWConfig(lr=0.0, grad_clip=1.0)
+    params = {"w": jnp.zeros(3)}
+    opt = adamw_init(params)
+    _, _, gnorm = adamw_update(params, {"w": jnp.full(3, 100.0)}, opt, cfg)
+    assert float(gnorm) > 100.0  # reported pre-clip
+
+
+def test_schedules():
+    assert abs(float(linear_warmup(0, 10)) - 0.1) < 1e-6
+    assert float(cosine_schedule(0, 100, warmup=10)) < 0.2
+    assert abs(float(cosine_schedule(100, 100, warmup=10)) - 0.1) < 1e-5
+    mid = float(cosine_schedule(55, 100, warmup=10))
+    assert 0.1 < mid < 1.0

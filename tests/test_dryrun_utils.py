@@ -1,0 +1,77 @@
+"""Unit tests for dry-run utilities that don't need 512 devices."""
+import importlib
+import sys
+import types
+
+import pytest
+
+
+@pytest.fixture(scope="module")
+def dr():
+    """Import repro.launch.dryrun without letting its XLA_FLAGS line poison
+    this process (jax is already initialized single-device by conftest)."""
+    import os
+    saved = os.environ.get("XLA_FLAGS")
+    mod = importlib.import_module("repro.launch.dryrun")
+    if saved is None:
+        os.environ.pop("XLA_FLAGS", None)
+    else:
+        os.environ["XLA_FLAGS"] = saved
+    return mod
+
+
+def test_collective_bytes_gspmd_style(dr):
+    hlo = """
+  %all-gather.20 = f32[64,50432]{0,1} all-gather(%fusion), channel_id=170
+  %all-reduce.49 = f32[16,4096,504]{2,1,0} all-reduce(%x), to_apply=%add
+  %other = f32[4,4]{1,0} add(%a, %b)
+"""
+    out = dr.collective_bytes(hlo)
+    assert out["all-gather"] == 64 * 50432 * 4
+    assert out["all-reduce"] == 16 * 4096 * 504 * 4
+    assert out["total"] == out["all-gather"] + out["all-reduce"]
+
+
+def test_collective_bytes_shardmap_style(dr):
+    hlo = """
+  %all_gather.10 = f32[256,4096]{1,0} all-gather(%gte), channel_id=1
+  %collective_permute.3 = bf16[1,128]{1,0} collective-permute(%row)
+"""
+    out = dr.collective_bytes(hlo)
+    assert out["all-gather"] == 256 * 4096 * 4
+    assert out["collective-permute"] == 128 * 2
+    assert out["total"] == out["all-gather"] + out["collective-permute"]
+
+
+def test_collective_bytes_skips_done_halves(dr):
+    hlo = """
+  %ag-start = (f32[8,8]{1,0}, f32[16,8]{1,0}) all-gather-start(%x)
+  %ag-done = f32[16,8]{1,0} all-gather-done(%ag-start)
+"""
+    out = dr.collective_bytes(hlo)
+    # start counts (both tuple buffers), done is skipped
+    assert out["all-gather"] == (8 * 8 + 16 * 8) * 4
+    assert "all-gather-done" not in out
+
+
+def test_scan_units(dr):
+    import repro.configs as configs
+    cfg = configs.get("qwen3_32b")
+    assert dr._scan_units(cfg) == [(("attn",), 64)]
+    cfg = configs.get("recurrentgemma_2b")
+    assert dr._scan_units(cfg) == [(("rec", "rec", "attn"), 8)]
+    cfg = configs.get("seamless_m4t_large_v2")
+    assert dr._scan_units(cfg) == [(("attn",), 24), (("enc",), 24)]
+
+
+def test_mode_for(dr):
+    import repro.configs as configs
+    cfg = configs.get("qwen3_14b")
+    assert dr._mode_for(cfg, "long_500k") == "long"
+    assert dr._mode_for(cfg, "train_4k") == "train"
+
+
+def test_hardware_constants(dr):
+    assert dr.PEAK_FLOPS == 197e12
+    assert dr.HBM_BW == 819e9
+    assert dr.ICI_BW == 50e9

@@ -1,0 +1,86 @@
+"""Graph topologies + the simulation generator / Lemma 4.1 oracle."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import graph, metrics
+from repro.core.simulate import SimConfig, ar_cov, generate, true_beta
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(3, 20), pc=st.floats(0.2, 0.9), seed=st.integers(0, 100))
+def test_erdos_renyi_connected_symmetric(m, pc, seed):
+    W = graph.erdos_renyi(m, pc, seed)
+    assert graph.is_connected(W)
+    assert np.array_equal(W, W.T)
+    assert np.all(np.diag(W) == 0)
+
+
+@pytest.mark.parametrize("kind", ["ring", "star", "complete", "grid", "torus"])
+def test_named_topologies(kind):
+    W = graph.make_graph(kind, 12)
+    assert graph.is_connected(W)
+    assert np.all(np.diag(W) == 0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(3, 16), seed=st.integers(0, 50))
+def test_metropolis_doubly_stochastic(m, seed):
+    W = graph.erdos_renyi(m, 0.5, seed)
+    M = graph.metropolis_weights(W)
+    np.testing.assert_allclose(M.sum(axis=0), 1.0, atol=1e-5)
+    np.testing.assert_allclose(M.sum(axis=1), 1.0, atol=1e-5)
+    assert np.all(M >= -1e-8)
+
+
+def test_ar_cov():
+    S = ar_cov(4, 0.5)
+    assert S[0, 0] == 1.0 and abs(S[0, 3] - 0.125) < 1e-12
+
+
+def test_generator_statistics():
+    cfg = SimConfig(p=40, s=5, m=4, n=2000, mu=0.4, rho=0.5, p_flip=0.0)
+    X, y, bstar = generate(cfg, seed=0)
+    Xf = X.reshape(-1, 41)
+    yf = y.reshape(-1)
+    assert set(np.unique(yf)) == {-1.0, 1.0}
+    assert np.allclose(Xf[:, 0], 1.0)  # intercept column
+    # class-conditional mean of informative covariates ~ +/- mu
+    mu_hat = Xf[yf == 1, 1:6].mean()
+    assert abs(mu_hat - 0.4) < 0.05
+    # noise covariates centered
+    assert abs(Xf[:, 20:].mean()) < 0.05
+
+
+def test_lemma41_oracle_properties():
+    cfg = SimConfig(p=60, s=10, mu=0.4, rho=0.5)
+    b = true_beta(cfg)
+    assert b.shape == (61,)
+    assert abs(b[0]) < 1e-8                      # symmetric means -> 0 intercept
+    assert np.all(b[1:11] != 0)                  # informative block nonzero
+    np.testing.assert_allclose(b[11:], 0.0)      # noise block exactly zero
+
+
+def test_lemma41_matches_bayes_direction():
+    """The population SVM slope is proportional to Sigma^-1 (mu+ - mu-)."""
+    cfg = SimConfig(p=30, s=5, mu=0.4, rho=0.3)
+    b = true_beta(cfg)
+    mu = np.zeros(30)
+    mu[:5] = 0.4
+    Sigma = np.zeros((30, 30))
+    Sigma[:5, :5] = ar_cov(5, 0.3)
+    Sigma[5:, 5:] = ar_cov(25, 0.3)
+    direction = np.linalg.solve(Sigma, 2 * mu)
+    cos = b[1:] @ direction / (np.linalg.norm(b[1:]) * np.linalg.norm(direction))
+    assert cos > 0.9999
+
+
+def test_label_flips_applied():
+    cfg = SimConfig(p=20, s=5, m=2, n=5000, p_flip=0.10)
+    X1, y1, _ = generate(cfg, seed=3)
+    import dataclasses
+    X0, y0, _ = generate(dataclasses.replace(cfg, p_flip=0.0), seed=3)
+    flip_rate = np.mean(y1 != y0)
+    assert abs(flip_rate - 0.10) < 0.02

@@ -1,0 +1,66 @@
+"""Folded-concave penalties (paper §2.3(iii) extension) via one-step LLA."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ADMMConfig, decsvm_fit, generate, metrics, SimConfig
+from repro.core.graph import erdos_renyi
+from repro.core.penalties import (adaptive_weight, decsvm_fit_lla,
+                                  mcp_weight, scad_weight)
+
+
+@settings(max_examples=30, deadline=None)
+@given(b=st.floats(-5, 5), lam=st.floats(0.01, 1.0))
+def test_weight_properties(b, lam):
+    bj = jnp.float32(b)
+    for fn in (scad_weight, mcp_weight, adaptive_weight):
+        w = float(fn(bj, lam))
+        assert 0.0 <= w <= 1.0 + 1e-6
+    # SCAD/MCP: full penalty at 0, none far away
+    assert float(scad_weight(jnp.float32(0.0), lam)) == 1.0
+    assert float(scad_weight(jnp.float32(10.0 * lam), lam)) == 0.0
+    assert float(mcp_weight(jnp.float32(0.0), lam)) == 1.0
+    assert float(mcp_weight(jnp.float32(10.0 * lam), lam)) == 0.0
+
+
+def test_scad_unbiasedness_region():
+    lam = 0.1
+    b = jnp.linspace(0, 1.0, 101)
+    w = scad_weight(b, lam)
+    # flat-1 region then linear decay to 0 at a*lam
+    assert float(w[0]) == 1.0
+    assert float(w[(b <= lam).sum() - 1]) == 1.0
+    assert np.all(np.diff(np.asarray(w)) <= 1e-7)
+
+
+@pytest.mark.parametrize("penalty", ["scad", "mcp", "adaptive"])
+def test_lla_reduces_bias_keeps_support(penalty):
+    cfg = SimConfig(p=50, s=5, m=6, n=200, rho=0.3, mu=0.5, p_flip=0.0)
+    X, y, bstar = generate(cfg, seed=3)
+    W = erdos_renyi(cfg.m, 0.6, seed=3)
+    lam = 1.5 * float(np.sqrt(np.log(cfg.p) / cfg.n_total))
+    acfg = ADMMConfig(lam=lam, h=0.25, max_iter=300)
+    Xj, yj, Wj = jnp.asarray(X), jnp.asarray(y), jnp.asarray(W)
+    B1 = np.asarray(decsvm_fit(Xj, yj, Wj, acfg))
+    B2, w = decsvm_fit_lla(Xj, yj, Wj, acfg, penalty=penalty)
+    B2 = np.asarray(B2)
+    e1 = metrics.estimation_error(B1, bstar)
+    e2 = metrics.estimation_error(B2, bstar)
+    f2 = metrics.mean_f1(B2, bstar, tol=1e-3)
+    # folded-concave stage-2 must not hurt, usually reduces shrinkage bias
+    assert e2 <= e1 * 1.10, (penalty, e1, e2)
+    assert f2 >= 0.6, (penalty, f2)
+    assert np.isfinite(B2).all()
+
+
+def test_lla_weighted_threshold_is_exact():
+    """lam_weights=1 must reproduce the plain l1 path bit-for-bit."""
+    cfg = SimConfig(p=20, s=4, m=4, n=60)
+    X, y, _ = generate(cfg, seed=1)
+    W = erdos_renyi(4, 0.7, seed=1)
+    acfg = ADMMConfig(lam=0.05, max_iter=50)
+    Xj, yj, Wj = jnp.asarray(X), jnp.asarray(y), jnp.asarray(W)
+    B_plain = decsvm_fit(Xj, yj, Wj, acfg)
+    B_w1 = decsvm_fit(Xj, yj, Wj, acfg, lam_weights=jnp.ones(21))
+    np.testing.assert_array_equal(np.asarray(B_plain), np.asarray(B_w1))
