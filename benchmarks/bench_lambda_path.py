@@ -1,0 +1,105 @@
+"""Lambda-path engine benchmark: cold host loop vs batched vmap vs
+warm-start continuation, at the paper's simulation scale (Section 4.1:
+m=10, n=100, p=50, 12-point log grid).
+
+Emits ``BENCH_lambda_path.json`` at the repo root — the repo's first
+recorded perf-trajectory point.  Headline numbers are end-to-end
+(compile + run): the cold loop bakes lambda into the jit as a static
+constant, so every grid point — and every *new* grid — pays a fresh XLA
+compile; the path engines trace lambda and compile once, ever.
+Steady-state (post-compile) numbers are recorded alongside.
+
+    PYTHONPATH=src python benchmarks/bench_lambda_path.py
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ADMMConfig, SimConfig, decsvm_fit, generate, losses, tuning
+from repro.core.graph import erdos_renyi
+from repro.core.path import decsvm_path_batched, decsvm_path_warm
+
+M, N, P, GRID, MAX_ITER = 10, 100, 50, 12, 300
+WARM_TOL = 1e-4
+OUT = Path(__file__).resolve().parent.parent / "BENCH_lambda_path.json"
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    jax.block_until_ready(out)
+    return out, time.perf_counter() - t0
+
+
+def run() -> dict:
+    cfg = SimConfig(p=P, s=5, m=M, n=N, rho=0.5)
+    X, y, _ = generate(cfg, seed=0)
+    W = erdos_renyi(cfg.m, cfg.p_connect, seed=0)
+    Xj, yj, Wj = jnp.asarray(X), jnp.asarray(y), jnp.asarray(W, jnp.float32)
+    h = losses.default_bandwidth(cfg.n_total, cfg.p)
+    acfg = ADMMConfig(lam=0.0, h=h, max_iter=MAX_ITER)
+    lams = tuning.lambda_grid(X, y, num=GRID)
+    lams_j = jnp.asarray(lams)
+
+    def cold():
+        return [decsvm_fit(Xj, yj, Wj,
+                           ADMMConfig(lam=float(l), h=h, max_iter=MAX_ITER))
+                for l in lams]
+
+    cold_path, cold_s = _timed(cold)
+    cold_arr = jnp.stack(cold_path)
+    bat, bat_s = _timed(lambda: decsvm_path_batched(Xj, yj, Wj, lams_j, acfg))
+    (warm, iters), warm_s = _timed(
+        lambda: decsvm_path_warm(Xj, yj, Wj, lams_j, acfg, WARM_TOL))
+
+    # steady state: everything above is now compiled (cold reuses the same
+    # 12 static-lambda executables; a *new* grid would recompile all 12)
+    _, cold_ss = _timed(cold)
+    _, bat_ss = _timed(lambda: decsvm_path_batched(Xj, yj, Wj, lams_j, acfg))
+    _, warm_ss = _timed(
+        lambda: decsvm_path_warm(Xj, yj, Wj, lams_j, acfg, WARM_TOL))
+
+    dev_bat = float(jnp.max(jnp.abs(bat - cold_arr)))
+    dev_warm = float(jnp.max(jnp.abs(warm - cold_arr)))
+    result = {
+        "bench": "lambda_path",
+        "config": {"m": M, "n": N, "p": P, "grid": GRID,
+                   "max_iter": MAX_ITER, "warm_tol": WARM_TOL, "h": h,
+                   "backend": jax.default_backend()},
+        "end_to_end_s": {"cold": cold_s, "batched": bat_s, "warm": warm_s},
+        "steady_state_s": {"cold": cold_ss, "batched": bat_ss,
+                           "warm": warm_ss},
+        "speedup_batched": cold_s / bat_s,
+        "speedup_warm": cold_s / warm_s,
+        "max_abs_dev_batched_vs_cold": dev_bat,
+        "max_abs_dev_warm_vs_cold": dev_warm,
+        "warm_iters_per_lambda": np.asarray(iters).tolist(),
+        "criteria": {
+            "speedup_ge_3x": (cold_s / bat_s >= 3.0) or (cold_s / warm_s >= 3.0),
+            "batched_matches_cold_1e-4": dev_bat <= 1e-4,
+        },
+    }
+    return result
+
+
+def main() -> None:
+    result = run()
+    OUT.write_text(json.dumps(result, indent=2) + "\n")
+    e2e, crit = result["end_to_end_s"], result["criteria"]
+    print(f"cold    {e2e['cold']:7.3f}s  (12 per-lambda compiles)")
+    print(f"batched {e2e['batched']:7.3f}s  ({result['speedup_batched']:.1f}x, "
+          f"max dev {result['max_abs_dev_batched_vs_cold']:.2e})")
+    print(f"warm    {e2e['warm']:7.3f}s  ({result['speedup_warm']:.1f}x, "
+          f"iters {result['warm_iters_per_lambda']})")
+    print(f"criteria: {crit}")
+    print(f"wrote {OUT}")
+
+
+if __name__ == "__main__":
+    main()

@@ -4,16 +4,19 @@ from repro.core.admm import (ADMMConfig, decsvm_fit, soft_threshold,
 from repro.core.losses import (smoothed_hinge_loss, smoothed_hinge_grad,
                                get_kernel, hinge, KERNELS, default_bandwidth)
 from repro.core.simulate import SimConfig, generate, true_beta
-from repro.core import (baselines, gossip, graph, metrics, penalties,
+from repro.core import (baselines, gossip, graph, metrics, path, penalties,
                         tuning)
 from repro.core.admm_adaptive import decsvm_fit_tol, decsvm_fit_uneven
+from repro.core.path import (PathResult, decsvm_path_batched,
+                             decsvm_path_select, decsvm_path_warm)
 from repro.core.penalties import decsvm_fit_lla
 
 __all__ = [
     "ADMMConfig", "decsvm_fit", "soft_threshold", "compute_rho", "objective",
     "hard_threshold_final", "smoothed_hinge_loss", "smoothed_hinge_grad",
     "get_kernel", "hinge", "KERNELS", "default_bandwidth", "SimConfig",
-    "generate", "true_beta", "graph", "metrics", "tuning", "baselines",
-    "gossip", "penalties", "decsvm_fit_tol", "decsvm_fit_uneven",
-    "decsvm_fit_lla",
+    "generate", "true_beta", "graph", "metrics", "path", "tuning",
+    "baselines", "gossip", "penalties", "decsvm_fit_tol",
+    "decsvm_fit_uneven", "decsvm_fit_lla", "PathResult",
+    "decsvm_path_batched", "decsvm_path_warm", "decsvm_path_select",
 ]

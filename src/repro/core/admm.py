@@ -92,12 +92,15 @@ def admm_step(X: Array, y: Array, W: Array, deg: Array, rho: Array,
                else cfg.lam * lam_weights[None, :])
     neigh = W @ B                                   # (WB)_l = sum_{k in N(l)} b_k
     omega = 1.0 / (2.0 * cfg.tau * deg + rho + cfg.lam0)   # (m,)
-    if cfg.use_pallas and lam_weights is None:
+    if cfg.use_pallas:
         from repro.kernels import ops  # lazy: kernels dep is optional here
+        p = X.shape[2]
+        lam_row = (jnp.full((p,), cfg.lam, X.dtype) if lam_weights is None
+                   else cfg.lam * lam_weights)      # (p,) shared across nodes
         neigh_term = cfg.tau * (deg[:, None] * B + neigh)
         B_new = jax.vmap(
             lambda Xl, yl, bl, pl_, nl, rl, wl: ops.csvm_local_update(
-                Xl, yl, bl, pl_, nl, rl, wl, cfg.lam, h=cfg.h,
+                Xl, yl, bl, pl_, nl, rl, wl, lam_row, h=cfg.h,
                 kernel=cfg.kernel)
         )(X, y, B, P, neigh_term, rho, omega)
     else:
@@ -152,5 +155,11 @@ def objective(X: Array, y: Array, beta: Array, cfg: ADMMConfig) -> Array:
 
 
 def hard_threshold_final(B: Array, lam: float) -> Array:
-    """Theorem 4 post-processing: beta_hat = S_lambda(beta_{t+1})."""
-    return soft_threshold(B, lam)
+    """Theorem 4 post-processing: keep coordinates with |beta_j| > lambda.
+
+    True *hard* thresholding — surviving coordinates are passed through
+    unshrunk (soft-thresholding here would bias every survivor toward zero
+    by lambda and inflate estimation error; the ADMM update itself is the
+    only place soft-thresholding belongs).
+    """
+    return B * (jnp.abs(B) > lam)

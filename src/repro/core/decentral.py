@@ -29,6 +29,10 @@ from repro.core.admm import ADMMConfig, compute_rho, soft_threshold
 
 Array = jax.Array
 
+# JAX >= 0.7 requires zero-init scan carries inside shard_map to be marked
+# varying over the manual axis; older JAX has no pvary and needs no mark.
+_pvary = getattr(jax.lax, "pvary", lambda x, axes: x)
+
 
 def make_node_mesh(n_devices: Optional[int] = None) -> Mesh:
     n = n_devices or len(jax.devices())
@@ -45,18 +49,14 @@ def _local_grads(Xl, yl, Bl, h, kernel):
     return jax.vmap(one)(Xl, yl, Bl)
 
 
-def build_sharded_admm(m: int, p: int, cfg: ADMMConfig, mesh: Mesh,
-                       schedule: str = "gather"):
-    """Build the jitted sharded ADMM loop (lowerable against structs).
+def _make_step(cfg: ADMMConfig, schedule: str, ndev: int):
+    """Build the per-round sharded update with lambda as a *traced* scalar
+    (so the same step serves the fixed-lambda loop and the lambda path).
+    ndev is the node-axis size, known statically from the mesh (JAX<0.7 has
+    no jax.lax.axis_size to recover it inside the mapped function)."""
+    tau, lam0 = cfg.tau, cfg.lam0
 
-    Returns a jitted fn (X (m,n,p), y (m,n), W (m,m), deg (m,), rho (m,))
-    -> B (m, p), with node state sharded over the mesh's "node" axis.
-    """
-    ndev = mesh.shape["node"]
-    assert m % ndev == 0, f"m={m} must be divisible by #devices={ndev}"
-    tau, lam, lam0 = cfg.tau, cfg.lam, cfg.lam0
-
-    def step_gather(Xl, yl, Wl, degl, rhol, Bl, Pl):
+    def step_gather(Xl, yl, Wl, degl, rhol, Bl, Pl, lam):
         B_all = jax.lax.all_gather(Bl, "node", axis=0, tiled=True)   # (m, p)
         neigh = Wl @ B_all
         grads = _local_grads(Xl, yl, Bl, cfg.h, cfg.kernel)
@@ -72,16 +72,15 @@ def build_sharded_admm(m: int, p: int, cfg: ADMMConfig, mesh: Mesh,
         up = jnp.roll(Bl, -1, axis=0)    # row i <- row i+1 (local)
         dn = jnp.roll(Bl, 1, axis=0)     # row i <- row i-1 (local)
         # fix the shard boundaries with point-to-point permutes
-        ndev_ = jax.lax.axis_size("node")
-        fwd = [(d, (d + 1) % ndev_) for d in range(ndev_)]
-        bwd = [(d, (d - 1) % ndev_) for d in range(ndev_)]
+        fwd = [(d, (d + 1) % ndev) for d in range(ndev)]
+        bwd = [(d, (d - 1) % ndev) for d in range(ndev)]
         first_of_next = jax.lax.ppermute(Bl[:1], "node", bwd)   # comes from dev d+1
         last_of_prev = jax.lax.ppermute(Bl[-1:], "node", fwd)   # comes from dev d-1
         up = up.at[-1:].set(first_of_next)
         dn = dn.at[:1].set(last_of_prev)
         return up + dn
 
-    def step_ring(Xl, yl, Wl, degl, rhol, Bl, Pl):
+    def step_ring(Xl, yl, Wl, degl, rhol, Bl, Pl, lam):
         neigh = ring_neighbor_sum(Bl)
         grads = _local_grads(Xl, yl, Bl, cfg.h, cfg.kernel)
         omega = 1.0 / (2.0 * tau * degl + rhol + lam0)
@@ -90,19 +89,31 @@ def build_sharded_admm(m: int, p: int, cfg: ADMMConfig, mesh: Mesh,
         P_new = Pl + tau * (degl[:, None] * B_new - ring_neighbor_sum(B_new))
         return B_new, P_new
 
-    step = step_ring if schedule == "ring" else step_gather
+    return step_ring if schedule == "ring" else step_gather
+
+
+def build_sharded_admm(m: int, p: int, cfg: ADMMConfig, mesh: Mesh,
+                       schedule: str = "gather"):
+    """Build the jitted sharded ADMM loop (lowerable against structs).
+
+    Returns a jitted fn (X (m,n,p), y (m,n), W (m,m), deg (m,), rho (m,))
+    -> B (m, p), with node state sharded over the mesh's "node" axis.
+    """
+    ndev = mesh.shape["node"]
+    assert m % ndev == 0, f"m={m} must be divisible by #devices={ndev}"
+    step = _make_step(cfg, schedule, ndev)
 
     def sharded_loop(Xl, yl, Wl, degl, rhol):
         Bl = jnp.zeros((Xl.shape[0], p), Xl.dtype)
         Pl = jnp.zeros_like(Bl)
         # Mark the zero-init carries as varying over the node axis (JAX>=0.7
         # tracks varying-manual-axes through scan carries).
-        Bl = jax.lax.pvary(Bl, ("node",))
-        Pl = jax.lax.pvary(Pl, ("node",))
+        Bl = _pvary(Bl, ("node",))
+        Pl = _pvary(Pl, ("node",))
 
         def body(carry, _):
             Bl, Pl = carry
-            return step(Xl, yl, Wl, degl, rhol, Bl, Pl), None
+            return step(Xl, yl, Wl, degl, rhol, Bl, Pl, cfg.lam), None
 
         (Bl, _), _ = jax.lax.scan(body, (Bl, Pl), None, length=cfg.max_iter)
         return Bl
@@ -111,6 +122,42 @@ def build_sharded_admm(m: int, p: int, cfg: ADMMConfig, mesh: Mesh,
         sharded_loop, mesh=mesh,
         in_specs=(P("node"), P("node"), P("node"), P("node"), P("node")),
         out_specs=P("node"))
+    return jax.jit(fn)
+
+
+def build_sharded_path(m: int, p: int, L: int, cfg: ADMMConfig, mesh: Mesh,
+                       schedule: str = "gather"):
+    """Sharded node x lambda engine: node state sharded over devices, the
+    lambda grid vmapped on top — one compiled program fits all L grid
+    points, each with the same collective schedule as the single fit.
+
+    Returns a jitted fn (X, y, W, deg, rho, lams (L,)) -> path (L, m, p).
+    """
+    ndev = mesh.shape["node"]
+    assert m % ndev == 0, f"m={m} must be divisible by #devices={ndev}"
+    step = _make_step(cfg, schedule, ndev)
+
+    def sharded_loop(Xl, yl, Wl, degl, rhol, lams):
+        m_local = Xl.shape[0]
+        Bl = jnp.zeros((L, m_local, p), Xl.dtype)
+        Pl = jnp.zeros_like(Bl)
+        Bl = _pvary(Bl, ("node",))
+        Pl = _pvary(Pl, ("node",))
+        step_v = jax.vmap(
+            lambda B, Pd, lam: step(Xl, yl, Wl, degl, rhol, B, Pd, lam))
+
+        def body(carry, _):
+            Bl, Pl = carry
+            return step_v(Bl, Pl, lams), None
+
+        (Bl, _), _ = jax.lax.scan(body, (Bl, Pl), None, length=cfg.max_iter)
+        return Bl
+
+    fn = shard_map(
+        sharded_loop, mesh=mesh,
+        in_specs=(P("node"), P("node"), P("node"), P("node"), P("node"),
+                  P()),
+        out_specs=P(None, "node"))
     return jax.jit(fn)
 
 
@@ -134,6 +181,31 @@ def decsvm_fit_sharded(X: Array, y: Array, W: np.ndarray, cfg: ADMMConfig,
     y = jax.device_put(y, node_sharded)
     fitted = build_sharded_admm(m, p, cfg, mesh, schedule)
     return fitted(X, y, Wj, deg, rho)
+
+
+def decsvm_path_sharded(X: Array, y: Array, W: np.ndarray, lams,
+                        cfg: ADMMConfig, mesh: Optional[Mesh] = None,
+                        schedule: str = "gather") -> Array:
+    """Run the whole lambda grid with node state sharded across devices.
+
+    X: (m, n, p), y: (m, n), W: (m, m), lams: (L,) decreasing grid.
+    Returns the path (L, m, p), replicated on exit; score it with
+    ``repro.core.path.score_path`` / select via the modified BIC.
+    cfg.lam is ignored (the grid supplies lambda).
+    """
+    mesh = mesh or make_node_mesh()
+    m, _, p = X.shape
+    if schedule == "ring":
+        _assert_ring(W)
+    lams = jnp.asarray(lams, X.dtype)
+    Wj = jnp.asarray(W, X.dtype)
+    deg = jnp.sum(Wj, axis=1)
+    rho = compute_rho(X, cfg.h, cfg.kernel, cfg.rho_safety)
+    node_sharded = NamedSharding(mesh, P("node"))
+    X = jax.device_put(X, node_sharded)
+    y = jax.device_put(y, node_sharded)
+    fitted = build_sharded_path(m, p, int(lams.shape[0]), cfg, mesh, schedule)
+    return fitted(X, y, Wj, deg, rho, lams)
 
 
 def _assert_ring(W: np.ndarray) -> None:

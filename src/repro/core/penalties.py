@@ -10,6 +10,9 @@ so the stage-2 solve reuses Algorithm 1 unchanged.
 """
 from __future__ import annotations
 
+import dataclasses
+from typing import Optional, Sequence
+
 import jax
 import jax.numpy as jnp
 
@@ -45,8 +48,17 @@ PENALTIES = {
 
 
 def decsvm_fit_lla(X: Array, y: Array, W: Array, cfg: ADMMConfig,
-                   penalty: str = "scad", **pen_kwargs):
+                   penalty: str = "scad",
+                   lams: Optional[Sequence[float]] = None,
+                   path_mode: str = "warm", **pen_kwargs):
     """Two-stage LLA: l1 pilot -> penalty-weighted re-fit.
+
+    When ``lams`` is given, the stage-1 pilot comes from the batched
+    lambda-path engine: the grid is traversed on-device
+    (``repro.core.path``), the modified BIC picks lambda, and both the
+    pilot and the stage-2 penalty level use the selected value — one
+    compiled program instead of a per-lambda refit loop.  Otherwise the
+    pilot is a single l1 fit at ``cfg.lam``.
 
     Weights are computed from the network-average pilot (each node can form
     it with one extra all-reduce round in deployment).
@@ -54,7 +66,14 @@ def decsvm_fit_lla(X: Array, y: Array, W: Array, cfg: ADMMConfig,
     """
     if penalty not in PENALTIES:
         raise ValueError(f"penalty {penalty!r} not in {sorted(PENALTIES)}")
-    B1 = decsvm_fit(X, y, W, cfg)
+    if lams is not None:
+        from repro.core import path as path_mod  # local import: avoid cycle
+        res = path_mod.decsvm_path_select(X, y, W, jnp.asarray(lams), cfg,
+                                          mode=path_mode)
+        cfg = dataclasses.replace(cfg, lam=float(res.best_lam))
+        B1 = res.best_B
+    else:
+        B1 = decsvm_fit(X, y, W, cfg)
     pilot = jnp.mean(B1, axis=0)
     w = PENALTIES[penalty](pilot, cfg.lam, **pen_kwargs)
     B2 = decsvm_fit(X, y, W, cfg, lam_weights=w)

@@ -8,13 +8,33 @@
 per-sample so the criterion is scale-consistent — noted in DESIGN.md).
 A gossip protocol would broadcast the two scalars in deployment; here the
 reduction is exact.
+
+Three ways to traverse the lambda grid, slowest to fastest:
+
+- **cold** (``select_lambda``): host Python loop, each lambda refit from
+  zero through ``decsvm_fit``.  Since ``ADMMConfig.lam`` is static under
+  jit this recompiles per grid point — it is the reference semantics, and
+  the baseline the path engine is benchmarked against
+  (``benchmarks/bench_lambda_path.py``).
+- **batched** (``repro.core.path.decsvm_path_batched``): one compile, all
+  grid points advance in lockstep under ``vmap``.  Same trajectories as
+  cold (zero start, fixed iteration count); best when you need the full
+  path to match the reference or want maximal accelerator utilization.
+- **warm** (``repro.core.path.decsvm_path_warm``): one compile, sequential
+  continuation over decreasing lambda with warm starts (A7) and per-lambda
+  early stopping.  Fewest total ADMM rounds — the production default —
+  but per-lambda solutions deviate from cold by up to the early-stop
+  tolerance.
+
+``select_lambda_path`` wraps the on-device engine with this module's
+(best_lam, best_B, table) convention.
 """
 from __future__ import annotations
 
-import dataclasses
 import math
-from typing import Callable, Sequence
+from typing import Callable, Optional, Sequence
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import metrics
@@ -22,7 +42,7 @@ from repro.core import metrics
 
 def modified_bic(X: np.ndarray, y: np.ndarray, B: np.ndarray,
                  tol: float = 1e-8) -> float:
-    """X: (m, n, p), y: (m, n), B: (m, p)."""
+    """X: (m, n, p), y: (m, n), B: (m, p).  NumPy reference."""
     X, y, B = map(np.asarray, (X, y, B))
     m, n, p = X.shape
     N = m * n
@@ -32,9 +52,24 @@ def modified_bic(X: np.ndarray, y: np.ndarray, B: np.ndarray,
     return hinge + math.sqrt(math.log(N)) * math.log(p) * mean_supp / N
 
 
+def modified_bic_jnp(X, y, B, tol: float = 1e-8):
+    """jnp port of ``modified_bic`` — traceable, so the path engine can
+    fuse scoring into the same compiled program as the fits."""
+    m, n, p = X.shape
+    N = m * n
+    margins = y * jnp.einsum("mnp,mp->mn", X, B)
+    hinge = jnp.sum(jnp.maximum(1.0 - margins, 0.0)) / N
+    mean_supp = jnp.mean(jnp.sum(jnp.abs(B) > tol, axis=1).astype(X.dtype))
+    return hinge + math.sqrt(math.log(N)) * math.log(p) * mean_supp / N
+
+
 def lambda_grid(X: np.ndarray, y: np.ndarray, num: int = 12,
                 min_frac: float = 1e-3) -> np.ndarray:
-    """Log-spaced grid below lambda_max = |X'y/N|_inf (all-zero threshold)."""
+    """Log-spaced grid below lambda_max = |X'y/N|_inf (all-zero threshold).
+
+    Returned in *decreasing* order — the traversal order the warm-start
+    continuation engine requires.
+    """
     X2 = np.asarray(X).reshape(-1, X.shape[-1])
     y2 = np.asarray(y).reshape(-1)
     lam_max = float(np.max(np.abs(X2.T @ y2)) / len(y2))
@@ -43,7 +78,10 @@ def lambda_grid(X: np.ndarray, y: np.ndarray, num: int = 12,
 
 def select_lambda(fit_fn: Callable[[float], np.ndarray], X: np.ndarray,
                   y: np.ndarray, lams: Sequence[float]):
-    """Fit at each lambda, return (best_lambda, best_B, table)."""
+    """Cold-start reference loop: fit at each lambda on the host, return
+    (best_lambda, best_B, table).  Prefer ``select_lambda_path`` for any
+    grid larger than a few points — it compiles once instead of per-point.
+    """
     best = (None, None, np.inf)
     table = []
     for lam in lams:
@@ -53,3 +91,28 @@ def select_lambda(fit_fn: Callable[[float], np.ndarray], X: np.ndarray,
         if crit < best[2]:
             best = (float(lam), B, crit)
     return best[0], best[1], table
+
+
+def select_lambda_path(X, y, W, cfg, lams: Optional[Sequence[float]] = None,
+                       num: int = 12, mode: str = "warm", tol: float = 1e-6,
+                       lam_weights=None):
+    """On-device grid selection via ``repro.core.path``.
+
+    Builds ``lambda_grid(X, y, num)`` when ``lams`` is omitted, runs the
+    batched or warm-start traversal, and returns the same
+    (best_lam, best_B, table) triple as ``select_lambda`` — table rows are
+    (lambda, modified BIC, mean support size).  The full on-device
+    ``PathResult`` is returned as a fourth element.
+    """
+    from repro.core import path as path_mod  # local import: avoid cycle
+
+    if lams is None:
+        lams = lambda_grid(np.asarray(X), np.asarray(y), num=num)
+    res = path_mod.decsvm_path_select(jnp.asarray(X), jnp.asarray(y),
+                                      jnp.asarray(W), jnp.asarray(lams), cfg,
+                                      mode=mode, tol=tol,
+                                      lam_weights=lam_weights)
+    table = [(float(l), float(c), metrics.mean_support_size(np.asarray(B)))
+             for l, c, B in zip(np.asarray(res.lams), np.asarray(res.criteria),
+                                np.asarray(res.path))]
+    return float(res.best_lam), np.asarray(res.best_B), table, res

@@ -12,8 +12,10 @@ stream X through VMEM exactly twice with no intermediate HBM round-trips:
 
 Tiles are (block_n, block_p) with block_p a multiple of 128 (lane width) and
 block_n a multiple of 8 (sublane), so both passes feed the MXU with aligned
-(8k, 128k) operands.  Scalars (rho, omega, lam) arrive as (1,1) operands so
-the kernel stays traceable under vmap over network nodes.
+(8k, 128k) operands.  Scalars (rho, omega) arrive as (1,1) operands so the
+kernel stays traceable under vmap over network nodes; lam is a (p, 1) column
+so per-coordinate penalty levels (adaptive/SCAD/MCP via one-step LLA) fuse
+into the same kernel — a uniform l1 level is just a constant column.
 """
 from __future__ import annotations
 
@@ -68,10 +70,9 @@ def _grad_update_kernel(x_ref, w_ref, beta_ref, pdual_ref, neigh_ref,
     def _epilogue():
         rho = rho_ref[0, 0]
         omega = omega_ref[0, 0]
-        lam = lam_ref[0, 0]
         z = rho * beta_ref[...] - out_ref[...] - pdual_ref[...] + neigh_ref[...]
         zo = omega * z
-        t = lam * omega
+        t = lam_ref[...] * omega           # (bp, 1) per-coordinate level
         out_ref[...] = jnp.sign(zo) * jnp.maximum(jnp.abs(zo) - t, 0.0)
 
 
@@ -84,6 +85,8 @@ def csvm_local_update(X, y, beta, p_dual, neigh, rho, omega, lam, *,
                       interpret: bool = True):
     """Fused ADMM local update for one node.  Shapes: X (n, p), vectors (p,).
 
+    lam may be a scalar (uniform l1 level) or a (p,) per-coordinate vector
+    (LLA stage 2); either way it is streamed as a (p, 1) column operand.
     n and p are padded to tile multiples inside; padding rows get y=0 so
     their dloss weight contributes sign(y)=0... (we zero w explicitly).
     """
@@ -95,11 +98,14 @@ def csvm_local_update(X, y, beta, p_dual, neigh, rho, omega, lam, *,
     bpad = jnp.pad(beta, (0, p_pad - p))
     ppad = jnp.pad(p_dual, (0, p_pad - p))
     npad = jnp.pad(neigh, (0, p_pad - p))
+    lam_vec = jnp.broadcast_to(jnp.asarray(lam, jnp.float32).reshape(-1), (p,))
+    lpad = jnp.pad(lam_vec, (0, p_pad - p))
 
     ycol = yp[:, None].astype(jnp.float32)
     bcol = bpad[:, None].astype(jnp.float32)
     pcol = ppad[:, None].astype(jnp.float32)
     ncol = npad[:, None].astype(jnp.float32)
+    lcol = lpad[:, None]
     scal = lambda s: jnp.asarray(s, jnp.float32).reshape(1, 1)
 
     grid1 = (n_pad // bn, p_pad // bp)
@@ -130,13 +136,13 @@ def csvm_local_update(X, y, beta, p_dual, neigh, rho, omega, lam, *,
             pl.BlockSpec((bp, 1), lambda j, k: (j, 0)),
             pl.BlockSpec((1, 1), lambda j, k: (0, 0)),
             pl.BlockSpec((1, 1), lambda j, k: (0, 0)),
-            pl.BlockSpec((1, 1), lambda j, k: (0, 0)),
+            pl.BlockSpec((bp, 1), lambda j, k: (j, 0)),
         ],
         out_specs=pl.BlockSpec((bp, 1), lambda j, k: (j, 0)),
         out_shape=jax.ShapeDtypeStruct((p_pad, 1), jnp.float32),
         interpret=interpret,
     )(Xp.astype(jnp.float32), w, bcol, pcol, ncol,
-      scal(rho), scal(omega), scal(lam))
+      scal(rho), scal(omega), lcol)
     return out[:p, 0].astype(X.dtype)
 
 

@@ -19,6 +19,8 @@ def _default_interpret() -> bool:
 
 def csvm_local_update(X, y, beta, p_dual, neigh, rho, omega, lam, *,
                       h, kernel="epanechnikov", interpret=None, **kw):
+    """Fused deCSVM local update.  lam is a scalar l1 level or a (p,)
+    per-coordinate vector (adaptive/SCAD/MCP weights via one-step LLA)."""
     interpret = _default_interpret() if interpret is None else interpret
     return _csvm_local_update(X, y, beta, p_dual, neigh, rho, omega, lam,
                               h=h, kernel=kernel, interpret=interpret, **kw)

@@ -15,7 +15,8 @@ def decsvm_local_update(X: Array, y: Array, beta: Array, p_dual: Array,
                         h: float, kernel: str = "epanechnikov") -> Array:
     """Oracle for the fused ADMM local update (paper eq. 7a').
 
-    X: (n, p), y: (n,), beta/p_dual/neigh: (p,); rho/omega/lam scalars.
+    X: (n, p), y: (n,), beta/p_dual/neigh: (p,); rho/omega scalars; lam a
+    scalar or (p,) per-coordinate penalty vector.
     neigh is the precomputed tau * sum_{k in N(l)} (beta_l + beta_k) term.
     Returns beta_new (p,).
     """

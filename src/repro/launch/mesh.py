@@ -21,3 +21,16 @@ def make_host_mesh(model_axis: int = 1):
 
 def data_axes(mesh) -> tuple:
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def use_mesh(mesh):
+    """Context manager setting the ambient mesh, across JAX versions.
+
+    JAX >= 0.6 exposes ``jax.sharding.set_mesh`` (required for bare
+    PartitionSpec sharding constraints); on older JAX the ``Mesh`` object
+    itself is the context manager that sets the global physical mesh.
+    """
+    set_mesh = getattr(jax.sharding, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh

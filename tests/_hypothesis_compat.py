@@ -1,0 +1,42 @@
+"""Degrade-gracefully shim around ``hypothesis``.
+
+Tier-1 collection must never break on an optional dev dependency: when
+``hypothesis`` is installed this module re-exports the real ``given`` /
+``settings`` / ``strategies``; when it is absent the decorators turn each
+property test into an individually-skipped test (the rest of the module
+still collects and runs).
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            # *args-only signature so pytest does not treat the property
+            # arguments as fixtures; the skip fires at call time.
+            def stub(*args, **kwargs):
+                pytest.skip("hypothesis is not installed")
+
+            stub.__name__ = fn.__name__
+            stub.__doc__ = fn.__doc__
+            return stub
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _Strategy:
+        """Placeholder: accepts any strategy constructor call."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _Strategy()

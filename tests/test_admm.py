@@ -116,3 +116,35 @@ def test_warm_start_matches_cold(sim):
     b0 = jnp.asarray(np.tile(bstar.astype(np.float32), (cfg.m, 1)))
     B_warm = np.asarray(decsvm_fit(X, y, jnp.asarray(W), acfg, beta0=b0))
     assert np.max(np.abs(B_cold - B_warm)) < 2e-2
+
+
+def test_hard_threshold_does_not_shrink_survivors():
+    """Theorem 4 post-processing is a *hard* threshold: coordinates above
+    lambda pass through exactly; only sub-lambda coordinates are zeroed
+    (regression: this used to soft-threshold, shrinking every survivor)."""
+    from repro.core import hard_threshold_final
+    lam = 0.05
+    B = jnp.asarray([[0.5, -0.3, 0.01, 0.0, -0.04],
+                     [1.0, 0.04, -0.06, 0.2, 0.049]], jnp.float32)
+    Bt = np.asarray(hard_threshold_final(B, lam))
+    Bn = np.asarray(B)
+    mask = np.abs(Bn) > lam
+    np.testing.assert_array_equal(Bt[mask], Bn[mask])   # survivors unshrunk
+    assert np.all(Bt[~mask] == 0.0)                     # the rest zeroed
+
+
+def test_hard_threshold_support_recovery(sim):
+    """On a support-recovering fit, thresholding must keep the estimation
+    error of the surviving coordinates unchanged (no lambda-sized bias)."""
+    from repro.core import hard_threshold_final
+    cfg, X, y, bstar, W = sim
+    acfg = ADMMConfig(lam=0.05, max_iter=400)
+    B = decsvm_fit(X, y, jnp.asarray(W), acfg)
+    Bt = np.asarray(hard_threshold_final(B, acfg.lam))
+    Bn = np.asarray(B)
+    kept = np.abs(Bn) > acfg.lam
+    np.testing.assert_array_equal(Bt[kept], Bn[kept])
+    # thresholding must not push error up by the soft-threshold bias
+    e_raw = metrics.estimation_error(Bn, bstar)
+    e_thr = metrics.estimation_error(Bt, bstar)
+    assert e_thr <= e_raw + 0.05, (e_thr, e_raw)

@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels import ops, ref
 
@@ -154,3 +154,31 @@ def test_flash_attention_matches_model_attention():
     np.testing.assert_allclose(np.asarray(out_xla),
                                np.asarray(out_pl.transpose(0, 2, 1, 3)),
                                atol=2e-5)
+
+
+def test_csvm_update_lam_vector_matches_oracle():
+    """Per-coordinate penalty levels (LLA stage 2) through the fused kernel."""
+    X, y, beta, pd, ng = _csvm_inputs(64, 96)
+    lamv = jnp.asarray(RNG.uniform(0.0, 0.3, 96), jnp.float32)
+    got = ops.csvm_local_update(X, y, beta, pd, ng, 2.0, 0.1, lamv, h=0.25)
+    want = ref.decsvm_local_update(X, y, beta, pd, ng, 2.0, 0.1, lamv, 0.25)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_admm_pallas_with_lam_weights_matches_dense():
+    """LLA stage 2 (non-uniform lam_weights) no longer silently falls back
+    to the dense path: the Pallas route agrees with it."""
+    from repro.core import ADMMConfig, SimConfig, decsvm_fit, generate
+    from repro.core.graph import erdos_renyi
+    cfg = SimConfig(p=20, s=4, m=4, n=60)
+    X, y, _ = generate(cfg, seed=1)
+    W = jnp.asarray(erdos_renyi(cfg.m, 0.8, seed=0), jnp.float32)
+    w = jnp.asarray(RNG.uniform(0.2, 1.0, cfg.p + 1), jnp.float32)
+    dense = decsvm_fit(jnp.asarray(X), jnp.asarray(y), W,
+                       ADMMConfig(lam=0.08, max_iter=40), lam_weights=w)
+    pallas = decsvm_fit(jnp.asarray(X), jnp.asarray(y), W,
+                        ADMMConfig(lam=0.08, max_iter=40, use_pallas=True),
+                        lam_weights=w)
+    np.testing.assert_allclose(np.asarray(pallas), np.asarray(dense),
+                               atol=1e-5, rtol=1e-5)

@@ -1,6 +1,6 @@
 """Packed data pipeline invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.data.packing import (pack_documents, packed_batches,
                                 packing_efficiency, synthetic_documents)

@@ -1,0 +1,109 @@
+"""Batched lambda-path engine vs the cold-start reference loop."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ADMMConfig, SimConfig, decsvm_fit, generate, tuning
+from repro.core import decentral
+from repro.core.graph import erdos_renyi
+from repro.core.path import (decsvm_path_batched, decsvm_path_select,
+                             decsvm_path_warm)
+from repro.core.penalties import decsvm_fit_lla
+
+MAX_ITER = 150
+
+
+@pytest.fixture(scope="module")
+def sim():
+    cfg = SimConfig(p=24, s=4, m=4, n=80, rho=0.5, mu=0.5)
+    X, y, bstar = generate(cfg, seed=3)
+    W = erdos_renyi(cfg.m, 0.7, seed=1)
+    lams = tuning.lambda_grid(X, y, num=5)
+    return (cfg, jnp.asarray(X), jnp.asarray(y),
+            jnp.asarray(W, jnp.float32), lams)
+
+
+@pytest.fixture(scope="module")
+def cold_path(sim):
+    cfg, X, y, W, lams = sim
+    return np.stack([
+        np.asarray(decsvm_fit(X, y, W, ADMMConfig(lam=float(l),
+                                                  max_iter=MAX_ITER)))
+        for l in lams])
+
+
+def test_batched_matches_cold_loop_at_every_grid_point(sim, cold_path):
+    cfg, X, y, W, lams = sim
+    acfg = ADMMConfig(lam=0.0, max_iter=MAX_ITER)
+    path = np.asarray(decsvm_path_batched(X, y, W, jnp.asarray(lams), acfg))
+    assert path.shape == cold_path.shape
+    np.testing.assert_allclose(path, cold_path, atol=1e-4)
+
+
+def test_warm_start_selects_same_lambda_as_cold_select(sim):
+    cfg, X, y, W, lams = sim
+    acfg = ADMMConfig(lam=0.0, max_iter=MAX_ITER)
+
+    def fit(lam):
+        return decsvm_fit(X, y, W, ADMMConfig(lam=lam, max_iter=MAX_ITER))
+
+    best_cold, B_cold, table = tuning.select_lambda(
+        fit, np.asarray(X), np.asarray(y), lams)
+    res = decsvm_path_select(X, y, W, jnp.asarray(lams), acfg, mode="warm",
+                             tol=1e-7)
+    assert float(res.best_lam) == pytest.approx(best_cold, rel=1e-5)
+    # batched mode has cold semantics: its criteria match the host table
+    res_b = decsvm_path_select(X, y, W, jnp.asarray(lams), acfg,
+                               mode="batched")
+    np.testing.assert_allclose(np.asarray(res_b.criteria),
+                               [row[1] for row in table], atol=1e-3)
+    assert float(res_b.best_lam) == pytest.approx(best_cold, rel=1e-5)
+
+
+def test_warm_start_early_stops(sim):
+    cfg, X, y, W, lams = sim
+    acfg = ADMMConfig(lam=0.0, max_iter=MAX_ITER)
+    _, iters = decsvm_path_warm(X, y, W, jnp.asarray(lams), acfg, tol=1e-4)
+    iters = np.asarray(iters)
+    assert np.all(iters <= MAX_ITER)
+    # at lambda_max the solution is all-zero: convergence is immediate
+    assert iters[0] < MAX_ITER
+
+
+def test_modified_bic_jnp_matches_numpy(sim, cold_path):
+    cfg, X, y, W, lams = sim
+    for B in cold_path:
+        want = tuning.modified_bic(np.asarray(X), np.asarray(y), B)
+        got = float(tuning.modified_bic_jnp(X, y, jnp.asarray(B)))
+        assert got == pytest.approx(want, abs=1e-4)
+
+
+def test_select_lambda_path_wrapper(sim):
+    cfg, X, y, W, lams = sim
+    acfg = ADMMConfig(lam=0.0, max_iter=MAX_ITER)
+    best_lam, best_B, table, res = tuning.select_lambda_path(
+        X, y, W, acfg, lams=lams, mode="batched")
+    assert best_B.shape == (cfg.m, cfg.p + 1)
+    assert len(table) == len(lams)
+    crits = np.asarray(res.criteria)
+    assert best_lam == pytest.approx(float(lams[int(np.argmin(crits))]))
+    # BIC should not pick the densest (smallest-lambda) model
+    assert best_lam > lams[-1]
+
+
+def test_sharded_path_matches_batched(sim):
+    cfg, X, y, W, lams = sim
+    acfg = ADMMConfig(lam=0.0, max_iter=MAX_ITER)
+    bat = np.asarray(decsvm_path_batched(X, y, W, jnp.asarray(lams), acfg))
+    shd = np.asarray(decentral.decsvm_path_sharded(
+        X, y, np.asarray(W), lams, acfg))
+    np.testing.assert_allclose(shd, bat, atol=1e-5)
+
+
+def test_lla_stage1_pilot_from_path(sim):
+    cfg, X, y, W, lams = sim
+    acfg = ADMMConfig(lam=0.0, max_iter=MAX_ITER)
+    B2, w = decsvm_fit_lla(X, y, W, acfg, penalty="scad", lams=lams)
+    assert B2.shape == (cfg.m, cfg.p + 1)
+    assert w.shape == (cfg.p + 1,)
+    assert float(jnp.min(w)) >= 0.0 and float(jnp.max(w)) <= 1.0 + 1e-6
