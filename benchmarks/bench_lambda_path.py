@@ -26,7 +26,12 @@ from repro.core.graph import erdos_renyi
 from repro.core.path import decsvm_path_batched, decsvm_path_warm
 
 M, N, P, GRID, MAX_ITER = 10, 100, 50, 12, 300
-WARM_TOL = 1e-4
+# Warm early stop is the KKT/duality-gap residual (PR 4); 1e-3 demands
+# comparable solution quality to the old iterate-progress rule at 1e-4.
+# Grid points whose residual plateaus still run to MAX_ITER, and the
+# residual itself costs one network-gradient per round — see the
+# steady-state warm-vs-batched numbers for the current trade.
+WARM_TOL = 1e-3
 OUT = Path(__file__).resolve().parent.parent / "BENCH_lambda_path.json"
 
 

@@ -1,0 +1,145 @@
+"""2-D (node, lam) mesh path engine benchmark, on 8 forced CPU devices:
+
+  - batched     : dense single-device engine, lambda vmapped (reference)
+  - sharded_1d  : node-sharded engine, lambda vmapped on top — every
+                  device carries all L grid points
+  - mesh_2d     : true 2-D (node, lam) mesh — grid points sharded over
+                  their own axis, fused BIC scoring in-program.  The 2-D
+                  engine's device split is a free knob (the 1-D engine is
+                  pinned to node-axis-only), so the bench sweeps the legal
+                  (node, lam) splits and headlines the best: on CPU, where
+                  collectives are expensive relative to per-node compute,
+                  that shifts devices onto the embarrassingly-parallel
+                  lambda axis; on a real torus the node axis maps to ICI
+                  links and the trade-off reverses.
+
+Emits ``BENCH_mesh_path.json`` at the repo root with the same scale and
+fields as ``BENCH_lambda_path.json`` (end-to-end = compile + run,
+steady-state = post-compile min over reps), at m=8 nodes, L=8 grid
+points.  The headline criterion: the 2-D mesh's steady-state throughput
+(grid points per second) must be >= the lambda-vmapped 1-D engine's.
+
+    PYTHONPATH=src python benchmarks/bench_mesh_path.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from pathlib import Path
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import jax                     # noqa: E402  (env must be set pre-import)
+import jax.numpy as jnp        # noqa: E402
+
+from repro.core import ADMMConfig, SimConfig, generate, losses, tuning  # noqa: E402
+from repro.core import decentral  # noqa: E402
+from repro.core.graph import erdos_renyi  # noqa: E402
+from repro.core.path import decsvm_path_batched  # noqa: E402
+
+M, N, P, GRID, MAX_ITER = 8, 100, 50, 8, 300
+MESH_SPLITS = [(4, 2), (2, 4), (1, 8)]    # (node, lam) axis sizes to sweep
+STEADY_REPS = 5
+OUT = Path(__file__).resolve().parent.parent / "BENCH_mesh_path.json"
+
+
+def _timed(fn, reps: int = 1):
+    """(result, best-of-reps seconds) — min is robust to scheduler noise."""
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def run() -> dict:
+    assert len(jax.devices()) == 8, jax.devices()
+    cfg = SimConfig(p=P, s=5, m=M, n=N, rho=0.5)
+    X, y, _ = generate(cfg, seed=0)
+    W = erdos_renyi(cfg.m, cfg.p_connect, seed=0)
+    Xj, yj = jnp.asarray(X), jnp.asarray(y)
+    Wj = jnp.asarray(W, jnp.float32)
+    h = losses.default_bandwidth(cfg.n_total, cfg.p)
+    acfg = ADMMConfig(lam=0.0, h=h, max_iter=MAX_ITER)
+    lams = tuning.lambda_grid(X, y, num=GRID)
+    lams_j = jnp.asarray(lams)
+
+    def batched():
+        return decsvm_path_batched(Xj, yj, Wj, lams_j, acfg)
+
+    def sharded_1d():
+        return decentral.decsvm_path_sharded(Xj, yj, W, lams, acfg)
+
+    def mesh_fn(nn, nl):
+        mesh = decentral.make_node_lam_mesh(nn, nl)
+        return lambda: decentral.decsvm_path_mesh(Xj, yj, W, lams, acfg,
+                                                  mesh=mesh).path
+
+    bat, bat_s = _timed(batched)
+    shd, shd_s = _timed(sharded_1d)
+    mesh_e2e, mesh_ss, mesh_dev = {}, {}, {}
+    for nn, nl in MESH_SPLITS:
+        fn = mesh_fn(nn, nl)
+        msh, s = _timed(fn)
+        mesh_e2e[f"{nn}x{nl}"] = s
+        _, ss = _timed(fn, STEADY_REPS)
+        mesh_ss[f"{nn}x{nl}"] = ss
+        mesh_dev[f"{nn}x{nl}"] = float(jnp.max(jnp.abs(msh - bat)))
+
+    _, bat_ss = _timed(batched, STEADY_REPS)
+    _, shd_ss = _timed(sharded_1d, STEADY_REPS)
+    best_split = min(mesh_ss, key=mesh_ss.get)
+    msh_s, msh_ss_best = mesh_e2e[best_split], mesh_ss[best_split]
+    dev_msh = max(mesh_dev.values())
+
+    dev_shd = float(jnp.max(jnp.abs(shd - bat)))
+    thr = {k: GRID / v for k, v in
+           (("batched", bat_ss), ("sharded_1d", shd_ss),
+            ("mesh_2d", msh_ss_best))}
+    result = {
+        "bench": "mesh_path",
+        "config": {"m": M, "n": N, "p": P, "grid": GRID,
+                   "max_iter": MAX_ITER, "h": h,
+                   "devices": 8, "mesh_splits": MESH_SPLITS,
+                   "mesh_best_split": best_split,
+                   "backend": jax.default_backend()},
+        "end_to_end_s": {"batched": bat_s, "sharded_1d": shd_s,
+                         "mesh_2d": msh_s},
+        "steady_state_s": {"batched": bat_ss, "sharded_1d": shd_ss,
+                           "mesh_2d": msh_ss_best,
+                           "mesh_by_split": mesh_ss},
+        "throughput_grid_points_per_s": thr,
+        "speedup_mesh_vs_sharded_1d": shd_ss / msh_ss_best,
+        "max_abs_dev_sharded_vs_batched": dev_shd,
+        "max_abs_dev_mesh_vs_batched": dev_msh,
+        "criteria": {
+            "mesh_throughput_ge_sharded_1d": thr["mesh_2d"] >= thr["sharded_1d"],
+            "mesh_matches_batched_1e-5": dev_msh <= 1e-5,
+        },
+    }
+    return result
+
+
+def main() -> None:
+    result = run()
+    OUT.write_text(json.dumps(result, indent=2) + "\n")
+    ss, thr = result["steady_state_s"], result["throughput_grid_points_per_s"]
+    print(f"batched    {ss['batched']:7.3f}s  ({thr['batched']:6.2f} pts/s)")
+    print(f"sharded_1d {ss['sharded_1d']:7.3f}s  ({thr['sharded_1d']:6.2f} pts/s, "
+          f"dev {result['max_abs_dev_sharded_vs_batched']:.2e})")
+    print(f"mesh_2d    {ss['mesh_2d']:7.3f}s  ({thr['mesh_2d']:6.2f} pts/s, "
+          f"{result['speedup_mesh_vs_sharded_1d']:.2f}x vs 1-D, "
+          f"best split {result['config']['mesh_best_split']}, "
+          f"dev {result['max_abs_dev_mesh_vs_batched']:.2e})")
+    print(f"           by split: { {k: round(v, 3) for k, v in ss['mesh_by_split'].items()} }")
+    print(f"criteria: {result['criteria']}")
+    print(f"wrote {OUT}")
+
+
+if __name__ == "__main__":
+    main()

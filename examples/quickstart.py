@@ -39,9 +39,9 @@ def main():
         baselines.d_subgd_fit(Xj, yj, W, lam=lam, max_iter=100))
     results["deCSVM "] = np.asarray(decsvm_fit(Xj, yj, jnp.asarray(W), acfg))
     best_lam, best_B, _, res = tuning.select_lambda_path(
-        Xj, yj, jnp.asarray(W), acfg, num=12, mode="warm")
-    print(f"path engine: 12-point grid, warm-start continuation; "
-          f"BIC picked lambda={best_lam:.4f} "
+        Xj, yj, jnp.asarray(W), acfg, num=12, mode="warm", tol=1e-3)
+    print(f"path engine: 12-point grid, warm-start continuation, "
+          f"KKT early stop at 1e-3; BIC picked lambda={best_lam:.4f} "
           f"(iters/lambda: {np.asarray(res.iters).tolist()})")
     results["Tuned  "] = best_B
 

@@ -1,4 +1,10 @@
-"""deCSVM core: the paper's contribution as a composable JAX module."""
+"""deCSVM core: the paper's contribution as a composable JAX module.
+
+``repro.core.solver`` is the single home of the Algorithm-1 update; every
+fitting surface exported here is a thin driver over it.
+"""
+from repro.core import solver
+from repro.core.solver import Problem, SolverState, kkt_residual
 from repro.core.admm import (ADMMConfig, decsvm_fit, soft_threshold,
                              compute_rho, objective, hard_threshold_final)
 from repro.core.losses import (smoothed_hinge_loss, smoothed_hinge_grad,
@@ -12,6 +18,7 @@ from repro.core.path import (PathResult, decsvm_path_batched,
 from repro.core.penalties import decsvm_fit_lla
 
 __all__ = [
+    "solver", "Problem", "SolverState", "kkt_residual",
     "ADMMConfig", "decsvm_fit", "soft_threshold", "compute_rho", "objective",
     "hard_threshold_final", "smoothed_hinge_loss", "smoothed_hinge_grad",
     "get_kernel", "hinge", "KERNELS", "default_bandwidth", "SimConfig",

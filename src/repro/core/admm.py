@@ -1,16 +1,14 @@
-"""Generalized decentralized ADMM for the penalized convoluted SVM
+"""Dense single-process driver for the penalized convoluted SVM
 (paper Algorithm 1, updates (7a') and (7b)).
 
-This is the dense single-process engine: node states are stacked into
-B (m, p) / P (m, p) and the per-node update is vmapped; the one-hop
-neighbour sum is the matmul W @ B.  ``repro.core.decentral`` provides the
-shard_map multi-device engine with identical semantics (tested to agree).
-
-Update (per node l, with deg_l = |N(l)|):
-    grad_l = (1/n) sum_i L_h'(y_i x_i' b_l) y_i x_i
-    z_l    = rho_l b_l - grad_l - p_l + tau * (deg_l * b_l + (W B)_l)
-    b+_l   = S_{lam * w_l}( w_l * z_l ),   w_l = 1/(2 tau deg_l + rho_l + lam0)
-    p+_l   = p_l + tau * (deg_l * b+_l - (W B+)_l)
+The update math lives in ``repro.core.solver`` — one ``SolverState``
+pytree and one traced-lambda step shared by every engine in the repo.
+This module binds that step to the dense neighbour sum (``W @ B`` with
+node states stacked into B (m, p) / P (m, p)) and keeps the historical
+public surface: ``ADMMConfig``, ``admm_step``, ``decsvm_fit``,
+``objective``, ``hard_threshold_final``.  ``repro.core.decentral`` binds
+the same step to real collectives (multi-device shard_map engines);
+``repro.core.path`` drives it over a whole lambda grid.
 """
 from __future__ import annotations
 
@@ -20,30 +18,13 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import losses
+from repro.core import losses, solver
+# Re-exported: historically defined here, canonical home is core.solver.
+from repro.core.solver import (SolverState, compute_rho,  # noqa: F401
+                               power_iteration_lmax, soft_threshold)
 
 Array = jax.Array
-
-
-def soft_threshold(v: Array, t) -> Array:
-    """Coordinate-wise soft-thresholding S_t(v)."""
-    return jnp.sign(v) * jnp.maximum(jnp.abs(v) - t, 0.0)
-
-
-def power_iteration_lmax(X: Array, iters: int = 50) -> Array:
-    """Largest eigenvalue of X'X/n, matrix-free (X: (n, p))."""
-    n = X.shape[0]
-    v = jnp.full((X.shape[1],), 1.0 / jnp.sqrt(X.shape[1]), X.dtype)
-
-    def body(v, _):
-        w = X.T @ (X @ v) / n
-        return w / (jnp.linalg.norm(w) + 1e-30), None
-
-    v, _ = jax.lax.scan(body, v, None, length=iters)
-    w = X.T @ (X @ v) / n
-    return jnp.vdot(v, w) / (jnp.vdot(v, v) + 1e-30)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,53 +45,23 @@ class ADMMState(NamedTuple):
     t: Array      # iteration counter
 
 
-def compute_rho(X: Array, h: float, kernel: str, safety: float = 1.05) -> Array:
-    """rho_l >= c_h * Lmax(X_l'X_l/n) per node.  X: (m, n, p)."""
-    c_h = losses.get_kernel(kernel).lipschitz(h)
-    lmax = jax.vmap(power_iteration_lmax)(X)
-    return safety * c_h * lmax
-
-
-def local_gradient(X: Array, y: Array, beta: Array, h: float, kernel: str) -> Array:
-    """(1/n) X' (L_h'(y * X b) * y)   for a single node.  X:(n,p) y:(n,)."""
-    margin = y * (X @ beta)
-    w = losses.get_kernel(kernel).dloss(margin, h) * y
-    return X.T @ w / X.shape[0]
-
-
 def admm_step(X: Array, y: Array, W: Array, deg: Array, rho: Array,
               state: ADMMState, cfg: ADMMConfig,
               lam_weights: Optional[Array] = None) -> ADMMState:
-    """One round of Algorithm 1 across all m nodes.
+    """One round of Algorithm 1 across all m nodes (compat wrapper over
+    ``solver.make_step`` with the dense ``W @ B`` neighbour sum).
 
     lam_weights: optional (p,) per-coordinate multiplier of the l1 level —
     the hook for adaptive/SCAD/MCP penalties via one-step LLA
     (repro.core.penalties).
     """
-    B, P, t = state
-    lam_vec = (cfg.lam if lam_weights is None
-               else cfg.lam * lam_weights[None, :])
-    neigh = W @ B                                   # (WB)_l = sum_{k in N(l)} b_k
-    omega = 1.0 / (2.0 * cfg.tau * deg + rho + cfg.lam0)   # (m,)
-    if cfg.use_pallas:
-        from repro.kernels import ops  # lazy: kernels dep is optional here
-        p = X.shape[2]
-        lam_row = (jnp.full((p,), cfg.lam, X.dtype) if lam_weights is None
-                   else cfg.lam * lam_weights)      # (p,) shared across nodes
-        neigh_term = cfg.tau * (deg[:, None] * B + neigh)
-        B_new = jax.vmap(
-            lambda Xl, yl, bl, pl_, nl, rl, wl: ops.csvm_local_update(
-                Xl, yl, bl, pl_, nl, rl, wl, lam_row, h=cfg.h,
-                kernel=cfg.kernel)
-        )(X, y, B, P, neigh_term, rho, omega)
-    else:
-        grads = jax.vmap(local_gradient, in_axes=(0, 0, 0, None, None))(
-            X, y, B, cfg.h, cfg.kernel)
-        z = (rho[:, None] * B - grads - P
-             + cfg.tau * (deg[:, None] * B + neigh))
-        B_new = soft_threshold(omega[:, None] * z, lam_vec * omega[:, None])
-    P_new = P + cfg.tau * (deg[:, None] * B_new - W @ B_new)
-    return ADMMState(B_new, P_new, t + 1)
+    omega = 1.0 / (2.0 * cfg.tau * deg + rho + cfg.lam0)
+    prob = solver.Problem(X, y, deg, rho, omega, None)
+    step = solver.make_step(cfg, lambda B: W @ B)
+    st = solver.SolverState(state.B, state.P, state.t,
+                            jnp.asarray(jnp.inf, X.dtype))
+    new = step(prob, st, cfg.lam, lam_weights)
+    return ADMMState(new.B, new.P, new.t)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "track_history"))
@@ -129,21 +80,16 @@ def decsvm_fit(X: Array, y: Array, W: Array, cfg: ADMMConfig,
     Returns:
       B: (m, p) final node estimates; and, if track_history, H: (T, m, p).
     """
-    m, _, p = X.shape
-    deg = jnp.sum(W, axis=1)
-    rho = compute_rho(X, cfg.h, cfg.kernel, cfg.rho_safety)
-    B0 = jnp.zeros((m, p), X.dtype) if beta0 is None else beta0
-    state = ADMMState(B0, jnp.zeros((m, p), X.dtype), jnp.zeros((), jnp.int32))
-
-    def body(state, _):
-        new = admm_step(X, y, W, deg, rho, state, cfg,
-                        lam_weights=lam_weights)
-        return new, (new.B if track_history else None)
-
-    final, hist = jax.lax.scan(body, state, None, length=cfg.max_iter)
+    prob = solver.make_problem(X, y, W, cfg)
+    step = solver.make_step(cfg, lambda B: W @ B)
+    state = solver.init_state(prob, B0=beta0)
+    out = solver.run_fixed(step, prob, cfg.lam, lam_weights,
+                           num_iters=cfg.max_iter, state=state,
+                           track_history=track_history)
     if track_history:
+        final, hist = out
         return final.B, hist
-    return final.B
+    return out.B
 
 
 def objective(X: Array, y: Array, beta: Array, cfg: ADMMConfig) -> Array:

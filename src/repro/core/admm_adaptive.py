@@ -1,56 +1,46 @@
-"""Production conveniences on top of Algorithm 1:
+"""Production conveniences on top of Algorithm 1 — thin drivers over the
+unified step in ``repro.core.solver``:
 
-- ``decsvm_fit_tol``: while-loop driver with residual-based early stopping
-  (primal residual = consensus gap across edges; progress = |B_t - B_{t-1}|)
-  instead of a fixed iteration count.
+- ``decsvm_fit_tol``: while-loop driver with early stopping — either the
+  iterate-progress rule (progress = |B_t - B_{t-1}|) or the KKT/duality-gap
+  rule of ``solver.kkt_residual`` (``stop_rule="kkt"``).
 - ``decsvm_fit_uneven``: uneven local sample sizes n_l via sample masks
-  (the paper's "straightforward extension" — Section 2.1).
+  (the paper's "straightforward extension" — Section 2.1); the masks ride
+  the solver core's masked-gradient backend, the same machinery the k-fold
+  cross-validation path engine uses.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import losses
-from repro.core.admm import (ADMMConfig, ADMMState, admm_step, compute_rho,
-                             soft_threshold)
+from repro.core import solver
+from repro.core.admm import ADMMConfig
 
 Array = jax.Array
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
+@functools.partial(jax.jit, static_argnames=("cfg", "stop_rule"))
 def decsvm_fit_tol(X: Array, y: Array, W: Array, cfg: ADMMConfig,
-                   tol: float = 1e-6) -> Tuple[Array, Array]:
-    """Run Algorithm 1 until max_iter OR progress < tol.  Returns (B, t)."""
-    m, _, p = X.shape
-    deg = jnp.sum(W, axis=1)
-    rho = compute_rho(X, cfg.h, cfg.kernel, cfg.rho_safety)
-    state = ADMMState(jnp.zeros((m, p), X.dtype), jnp.zeros((m, p), X.dtype),
-                      jnp.zeros((), jnp.int32))
+                   tol: float = 1e-6,
+                   stop_rule: str = "progress") -> Tuple[Array, Array]:
+    """Run Algorithm 1 until max_iter OR stop statistic < tol.
 
-    def cond(carry):
-        state, prev_B, progress = carry
-        return (state.t < cfg.max_iter) & (progress > tol)
-
-    def body(carry):
-        state, prev_B, _ = carry
-        new = admm_step(X, y, W, deg, rho, state, cfg)
-        progress = jnp.max(jnp.abs(new.B - state.B))
-        return new, state.B, progress
-
-    init = (state, jnp.ones_like(state.B), jnp.asarray(jnp.inf, X.dtype))
-    final, _, _ = jax.lax.while_loop(cond, body, init)
+    stop_rule: "progress" (max|B_t - B_{t-1}|, the legacy rule) or "kkt"
+    (stationarity + consensus residual of ``solver.kkt_residual`` — an
+    actual optimality measure).  Returns (B, t).
+    """
+    if stop_rule not in ("kkt", "progress"):
+        raise ValueError(f"stop_rule {stop_rule!r} not in ('kkt', 'progress')")
+    prob = solver.make_problem(X, y, W, cfg)
+    step = solver.make_step(cfg, lambda B: W @ B)
+    residual_fn = (solver.kkt_residual_fn(cfg) if stop_rule == "kkt"
+                   else None)
+    final = solver.run_tol(step, prob, cfg.lam, max_iter=cfg.max_iter,
+                           tol=tol, residual_fn=residual_fn)
     return final.B, final.t
-
-
-def _masked_gradient(X, y, mask, beta, h, kernel):
-    kern = losses.get_kernel(kernel)
-    margin = y * (X @ beta)
-    w = kern.dloss(margin, h) * y * mask
-    return X.T @ w / jnp.maximum(jnp.sum(mask), 1.0)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
@@ -60,34 +50,11 @@ def decsvm_fit_uneven(X: Array, y: Array, mask: Array, W: Array,
 
     X: (m, n_max, p) zero-padded designs; mask: (m, n_max) in {0,1} marking
     real rows (n_l = mask[l].sum()).  Updates are identical to (7a')/(7b)
-    with n replaced by n_l per node.
+    with n replaced by n_l per node — the solver core's masked-gradient
+    backend; rho comes from the masked second moment (zero rows contribute
+    nothing).
     """
-    m, _, p = X.shape
-    deg = jnp.sum(W, axis=1)
-    # rho from masked second-moment: zero rows contribute nothing
-    Xm = X * mask[..., None]
-    c_h = losses.get_kernel(cfg.kernel).lipschitz(cfg.h)
-    from repro.core.admm import power_iteration_lmax
-
-    def node_rho(Xl, ml):
-        lmax = power_iteration_lmax(Xl) * Xl.shape[0] / jnp.maximum(
-            jnp.sum(ml), 1.0)
-        return cfg.rho_safety * c_h * lmax
-
-    rho = jax.vmap(node_rho)(Xm, mask)
-    omega = 1.0 / (2.0 * cfg.tau * deg + rho + cfg.lam0)
-    B = jnp.zeros((m, p), X.dtype)
-    P = jnp.zeros((m, p), X.dtype)
-
-    def body(carry, _):
-        B, P = carry
-        grads = jax.vmap(_masked_gradient, in_axes=(0, 0, 0, 0, None, None))(
-            X, y, mask, B, cfg.h, cfg.kernel)
-        neigh = W @ B
-        z = rho[:, None] * B - grads - P + cfg.tau * (deg[:, None] * B + neigh)
-        B_new = soft_threshold(omega[:, None] * z, cfg.lam * omega[:, None])
-        P_new = P + cfg.tau * (deg[:, None] * B_new - W @ B_new)
-        return (B_new, P_new), None
-
-    (B, _), _ = jax.lax.scan(body, (B, P), None, length=cfg.max_iter)
-    return B
+    prob = solver.make_problem(X, y, W, cfg, mask=mask)
+    step = solver.make_step(cfg, lambda B: W @ B)
+    final = solver.run_fixed(step, prob, cfg.lam, num_iters=cfg.max_iter)
+    return final.B

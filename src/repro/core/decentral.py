@@ -1,10 +1,10 @@
-"""Multi-device decentralized ADMM engine (shard_map over a "node" mesh axis).
+"""Multi-device decentralized ADMM engines (shard_map drivers over the
+unified Algorithm-1 step of ``repro.core.solver``).
 
-Semantics are identical to ``repro.core.admm`` (tested to agree bit-for-bit
-up to float tolerance); the difference is *where* node state lives: each
-device owns m/ndev nodes, and the one-hop neighbour sum is a real collective.
+Semantics are identical to ``repro.core.admm`` *by construction*: the same
+``solver.make_step`` runs here with the neighbour sum swapped for a real
+collective.  Each device owns m/ndev nodes; two exchange schedules:
 
-Two neighbour-exchange schedules:
   - "gather" (any graph): all_gather the (m_local, p) primal block then apply
     the local adjacency rows.  Correct for arbitrary W; collective volume
     O(m p) per round.
@@ -12,6 +12,20 @@ Two neighbour-exchange schedules:
     boundary rows; volume O(p) per round.  This is the beyond-paper,
     ICI-native schedule — on a TPU torus a ring of nodes maps onto physical
     one-hop links, exactly matching the paper's communication model.
+
+Three engines, in increasing parallelism:
+
+  - ``decsvm_fit_sharded``: one fit, node state sharded over the "node" axis.
+  - ``decsvm_path_sharded``: the lambda grid vmapped on top of the node
+    sharding — one program fits all L grid points, but every device carries
+    all L (lambda multiplies per-device memory and compute).
+  - ``decsvm_path_mesh``: the true 2-D (node, lam) device mesh — grid
+    points live on their own mesh axis, with warm-start continuation and
+    fused modified-BIC / k-fold-CV scoring inside the same shard_map
+    program.  Per-device cost scales with L / (lam-axis size).
+
+All engines accept ``lam_weights`` (per-coordinate l1 multipliers), so the
+LLA stage-2 re-fit of ``repro.core.penalties`` runs sharded.
 """
 from __future__ import annotations
 
@@ -24,14 +38,30 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.core import losses
-from repro.core.admm import ADMMConfig, compute_rho, soft_threshold
+from repro.core import solver
+from repro.core.admm import ADMMConfig
 
 Array = jax.Array
 
 # JAX >= 0.7 requires zero-init scan carries inside shard_map to be marked
-# varying over the manual axis; older JAX has no pvary and needs no mark.
+# varying over the manual axes; older JAX has no pvary and needs no mark.
 _pvary = getattr(jax.lax, "pvary", lambda x, axes: x)
+
+
+def _shard_map_no_rep_check(f, mesh, in_specs, out_specs):
+    """shard_map with replication checking off, across JAX versions.
+
+    JAX 0.4.x has no replication rule for while_loop (the early-stopped
+    warm traversal inside the mesh program), so checking must be disabled;
+    the flag is ``check_rep`` there and ``check_vma`` on newer JAX.
+    """
+    for kw in ("check_rep", "check_vma"):
+        try:
+            return shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **{kw: False})
+        except TypeError:
+            continue
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
 
 
 def make_node_mesh(n_devices: Optional[int] = None) -> Mesh:
@@ -39,173 +69,418 @@ def make_node_mesh(n_devices: Optional[int] = None) -> Mesh:
     return jax.make_mesh((n,), ("node",))
 
 
-def _local_grads(Xl, yl, Bl, h, kernel):
-    kern = losses.get_kernel(kernel)
+def _neighbor_sum_fn(schedule: str, ndev: int, Wl: Optional[Array]):
+    """Neighbour-sum backend for ``solver.make_step`` inside shard_map.
 
-    def one(X, y, b):
-        margin = y * (X @ b)
-        return X.T @ (kern.dloss(margin, h) * y) / X.shape[0]
+    ``gather``: (W B)_l via all_gather + the local adjacency rows Wl.
+    ``ring``: left+right neighbours via jnp.roll locally, shard boundaries
+    fixed with point-to-point permutes (ndev is static: JAX<0.7 has no
+    jax.lax.axis_size to recover it inside the mapped function).
+    """
+    if schedule == "ring":
 
-    return jax.vmap(one)(Xl, yl, Bl)
+        def ring_sum(Bl):
+            up = jnp.roll(Bl, -1, axis=0)    # row i <- row i+1 (local)
+            dn = jnp.roll(Bl, 1, axis=0)     # row i <- row i-1 (local)
+            fwd = [(d, (d + 1) % ndev) for d in range(ndev)]
+            bwd = [(d, (d - 1) % ndev) for d in range(ndev)]
+            first_of_next = jax.lax.ppermute(Bl[:1], "node", bwd)
+            last_of_prev = jax.lax.ppermute(Bl[-1:], "node", fwd)
+            up = up.at[-1:].set(first_of_next)
+            dn = dn.at[:1].set(last_of_prev)
+            return up + dn
 
+        return ring_sum
 
-def _make_step(cfg: ADMMConfig, schedule: str, ndev: int):
-    """Build the per-round sharded update with lambda as a *traced* scalar
-    (so the same step serves the fixed-lambda loop and the lambda path).
-    ndev is the node-axis size, known statically from the mesh (JAX<0.7 has
-    no jax.lax.axis_size to recover it inside the mapped function)."""
-    tau, lam0 = cfg.tau, cfg.lam0
-
-    def step_gather(Xl, yl, Wl, degl, rhol, Bl, Pl, lam):
+    def gather_sum(Bl):
         B_all = jax.lax.all_gather(Bl, "node", axis=0, tiled=True)   # (m, p)
-        neigh = Wl @ B_all
-        grads = _local_grads(Xl, yl, Bl, cfg.h, cfg.kernel)
-        omega = 1.0 / (2.0 * tau * degl + rhol + lam0)
-        z = rhol[:, None] * Bl - grads - Pl + tau * (degl[:, None] * Bl + neigh)
-        B_new = soft_threshold(omega[:, None] * z, lam * omega[:, None])
-        B_all_new = jax.lax.all_gather(B_new, "node", axis=0, tiled=True)
-        P_new = Pl + tau * (degl[:, None] * B_new - Wl @ B_all_new)
-        return B_new, P_new
+        return Wl @ B_all
 
-    def ring_neighbor_sum(Bl):
-        """sum of left+right ring neighbours for each locally-held node."""
-        up = jnp.roll(Bl, -1, axis=0)    # row i <- row i+1 (local)
-        dn = jnp.roll(Bl, 1, axis=0)     # row i <- row i-1 (local)
-        # fix the shard boundaries with point-to-point permutes
-        fwd = [(d, (d + 1) % ndev) for d in range(ndev)]
-        bwd = [(d, (d - 1) % ndev) for d in range(ndev)]
-        first_of_next = jax.lax.ppermute(Bl[:1], "node", bwd)   # comes from dev d+1
-        last_of_prev = jax.lax.ppermute(Bl[-1:], "node", fwd)   # comes from dev d-1
-        up = up.at[-1:].set(first_of_next)
-        dn = dn.at[:1].set(last_of_prev)
-        return up + dn
-
-    def step_ring(Xl, yl, Wl, degl, rhol, Bl, Pl, lam):
-        neigh = ring_neighbor_sum(Bl)
-        grads = _local_grads(Xl, yl, Bl, cfg.h, cfg.kernel)
-        omega = 1.0 / (2.0 * tau * degl + rhol + lam0)
-        z = rhol[:, None] * Bl - grads - Pl + tau * (degl[:, None] * Bl + neigh)
-        B_new = soft_threshold(omega[:, None] * z, lam * omega[:, None])
-        P_new = Pl + tau * (degl[:, None] * B_new - ring_neighbor_sum(B_new))
-        return B_new, P_new
-
-    return step_ring if schedule == "ring" else step_gather
+    return gather_sum
 
 
+def _local_problem(Xl, yl, degl, rhol, cfg, mask=None) -> solver.Problem:
+    omega = 1.0 / (2.0 * cfg.tau * degl + rhol + cfg.lam0)
+    return solver.Problem(Xl, yl, degl, rhol, omega, mask)
+
+
+def _zero_state(shape, dtype, axes) -> solver.SolverState:
+    """Zero SolverState with B, P, and progress marked varying over the
+    manual axes (progress starts replicated but becomes the shard-local
+    max|B_new - B| after one step; t stays replicated)."""
+    B = _pvary(jnp.zeros(shape, dtype), axes)
+    Pd = _pvary(jnp.zeros(shape, dtype), axes)
+    prog = _pvary(jnp.asarray(jnp.inf, dtype), axes)
+    return solver.SolverState(B, Pd, jnp.zeros((), jnp.int32), prog)
+
+
+@functools.lru_cache(maxsize=64)
 def build_sharded_admm(m: int, p: int, cfg: ADMMConfig, mesh: Mesh,
                        schedule: str = "gather"):
     """Build the jitted sharded ADMM loop (lowerable against structs).
 
-    Returns a jitted fn (X (m,n,p), y (m,n), W (m,m), deg (m,), rho (m,))
-    -> B (m, p), with node state sharded over the mesh's "node" axis.
+    Cached on (m, p, cfg, mesh, schedule) — ``jax.jit`` caches by function
+    identity, so without this every driver call would rebuild the closure
+    and retrace/recompile from scratch.
+
+    Returns a jitted fn (X (m,n,p), y (m,n), W (m,m), deg (m,), rho (m,),
+    lam_weights (p,)) -> B (m, p), node state sharded over "node".
     """
     ndev = mesh.shape["node"]
     assert m % ndev == 0, f"m={m} must be divisible by #devices={ndev}"
-    step = _make_step(cfg, schedule, ndev)
 
-    def sharded_loop(Xl, yl, Wl, degl, rhol):
-        Bl = jnp.zeros((Xl.shape[0], p), Xl.dtype)
-        Pl = jnp.zeros_like(Bl)
-        # Mark the zero-init carries as varying over the node axis (JAX>=0.7
-        # tracks varying-manual-axes through scan carries).
-        Bl = _pvary(Bl, ("node",))
-        Pl = _pvary(Pl, ("node",))
-
-        def body(carry, _):
-            Bl, Pl = carry
-            return step(Xl, yl, Wl, degl, rhol, Bl, Pl, cfg.lam), None
-
-        (Bl, _), _ = jax.lax.scan(body, (Bl, Pl), None, length=cfg.max_iter)
-        return Bl
+    def sharded_loop(Xl, yl, Wl, degl, rhol, lamw):
+        step = solver.make_step(cfg, _neighbor_sum_fn(schedule, ndev, Wl))
+        prob = _local_problem(Xl, yl, degl, rhol, cfg)
+        state = _zero_state((Xl.shape[0], p), Xl.dtype, ("node",))
+        return solver.run_fixed(step, prob, cfg.lam, lamw,
+                                num_iters=cfg.max_iter, state=state).B
 
     fn = shard_map(
         sharded_loop, mesh=mesh,
-        in_specs=(P("node"), P("node"), P("node"), P("node"), P("node")),
+        in_specs=(P("node"), P("node"), P("node"), P("node"), P("node"),
+                  P()),
         out_specs=P("node"))
     return jax.jit(fn)
 
 
+@functools.lru_cache(maxsize=64)
 def build_sharded_path(m: int, p: int, L: int, cfg: ADMMConfig, mesh: Mesh,
                        schedule: str = "gather"):
     """Sharded node x lambda engine: node state sharded over devices, the
     lambda grid vmapped on top — one compiled program fits all L grid
     points, each with the same collective schedule as the single fit.
 
-    Returns a jitted fn (X, y, W, deg, rho, lams (L,)) -> path (L, m, p).
+    Returns a jitted fn (X, y, W, deg, rho, lams (L,), lam_weights (p,))
+    -> path (L, m, p).
     """
     ndev = mesh.shape["node"]
     assert m % ndev == 0, f"m={m} must be divisible by #devices={ndev}"
-    step = _make_step(cfg, schedule, ndev)
 
-    def sharded_loop(Xl, yl, Wl, degl, rhol, lams):
+    def sharded_loop(Xl, yl, Wl, degl, rhol, lams, lamw):
+        step = solver.make_step(cfg, _neighbor_sum_fn(schedule, ndev, Wl))
+        prob = _local_problem(Xl, yl, degl, rhol, cfg)
         m_local = Xl.shape[0]
-        Bl = jnp.zeros((L, m_local, p), Xl.dtype)
-        Pl = jnp.zeros_like(Bl)
-        Bl = _pvary(Bl, ("node",))
-        Pl = _pvary(Pl, ("node",))
-        step_v = jax.vmap(
-            lambda B, Pd, lam: step(Xl, yl, Wl, degl, rhol, B, Pd, lam))
 
-        def body(carry, _):
-            Bl, Pl = carry
-            return step_v(Bl, Pl, lams), None
+        def fit_one(lam, B0, P0, prog0):
+            state = solver.SolverState(B0, P0, jnp.zeros((), jnp.int32),
+                                       prog0)
+            return solver.run_fixed(step, prob, lam, lamw,
+                                    num_iters=cfg.max_iter, state=state).B
 
-        (Bl, _), _ = jax.lax.scan(body, (Bl, Pl), None, length=cfg.max_iter)
-        return Bl
+        B0 = _pvary(jnp.zeros((L, m_local, p), Xl.dtype), ("node",))
+        P0 = _pvary(jnp.zeros((L, m_local, p), Xl.dtype), ("node",))
+        prog0 = _pvary(jnp.full((L,), jnp.inf, Xl.dtype), ("node",))
+        return jax.vmap(fit_one)(lams, B0, P0, prog0)
 
     fn = shard_map(
         sharded_loop, mesh=mesh,
         in_specs=(P("node"), P("node"), P("node"), P("node"), P("node"),
-                  P()),
+                  P(), P()),
         out_specs=P(None, "node"))
     return jax.jit(fn)
 
 
-def decsvm_fit_sharded(X: Array, y: Array, W: np.ndarray, cfg: ADMMConfig,
-                       mesh: Optional[Mesh] = None,
-                       schedule: str = "gather") -> Array:
-    """Run Algorithm 1 with node state sharded across devices.
-
-    X: (m, n, p), y: (m, n), W: (m, m).  m must divide the node-axis size.
-    Returns B: (m, p) (fully replicated on exit).
-    """
-    mesh = mesh or make_node_mesh()
-    m, _, p = X.shape
+def _prep(X, W, cfg, schedule):
     if schedule == "ring":
         _assert_ring(W)
     Wj = jnp.asarray(W, X.dtype)
     deg = jnp.sum(Wj, axis=1)
-    rho = compute_rho(X, cfg.h, cfg.kernel, cfg.rho_safety)
+    rho = solver.compute_rho(X, cfg.h, cfg.kernel, cfg.rho_safety)
+    return Wj, deg, rho
+
+
+def _lamw(lam_weights, p, dtype):
+    return (jnp.ones((p,), dtype) if lam_weights is None
+            else jnp.asarray(lam_weights, dtype))
+
+
+def decsvm_fit_sharded(X: Array, y: Array, W: np.ndarray, cfg: ADMMConfig,
+                       mesh: Optional[Mesh] = None,
+                       schedule: str = "gather",
+                       lam_weights: Optional[Array] = None) -> Array:
+    """Run Algorithm 1 with node state sharded across devices.
+
+    X: (m, n, p), y: (m, n), W: (m, m).  m must divide the node-axis size.
+    lam_weights: optional (p,) per-coordinate l1 multipliers (LLA stage 2).
+    Returns B: (m, p) (fully replicated on exit).
+    """
+    mesh = mesh or make_node_mesh()
+    m, _, p = X.shape
+    Wj, deg, rho = _prep(X, W, cfg, schedule)
     node_sharded = NamedSharding(mesh, P("node"))
     X = jax.device_put(X, node_sharded)
     y = jax.device_put(y, node_sharded)
     fitted = build_sharded_admm(m, p, cfg, mesh, schedule)
-    return fitted(X, y, Wj, deg, rho)
+    return fitted(X, y, Wj, deg, rho, _lamw(lam_weights, p, X.dtype))
 
 
 def decsvm_path_sharded(X: Array, y: Array, W: np.ndarray, lams,
                         cfg: ADMMConfig, mesh: Optional[Mesh] = None,
-                        schedule: str = "gather") -> Array:
+                        schedule: str = "gather",
+                        lam_weights: Optional[Array] = None) -> Array:
     """Run the whole lambda grid with node state sharded across devices.
 
     X: (m, n, p), y: (m, n), W: (m, m), lams: (L,) decreasing grid.
     Returns the path (L, m, p), replicated on exit; score it with
     ``repro.core.path.score_path`` / select via the modified BIC.
-    cfg.lam is ignored (the grid supplies lambda).
+    cfg.lam is ignored (the grid supplies lambda).  Every device carries
+    all L grid points — see ``decsvm_path_mesh`` for the 2-D layout that
+    shards the grid too.
     """
     mesh = mesh or make_node_mesh()
     m, _, p = X.shape
-    if schedule == "ring":
-        _assert_ring(W)
     lams = jnp.asarray(lams, X.dtype)
-    Wj = jnp.asarray(W, X.dtype)
-    deg = jnp.sum(Wj, axis=1)
-    rho = compute_rho(X, cfg.h, cfg.kernel, cfg.rho_safety)
+    Wj, deg, rho = _prep(X, W, cfg, schedule)
     node_sharded = NamedSharding(mesh, P("node"))
     X = jax.device_put(X, node_sharded)
     y = jax.device_put(y, node_sharded)
     fitted = build_sharded_path(m, p, int(lams.shape[0]), cfg, mesh, schedule)
-    return fitted(X, y, Wj, deg, rho, lams)
+    return fitted(X, y, Wj, deg, rho, lams, _lamw(lam_weights, p, X.dtype))
+
+
+# --------------------------------------------------------------------------
+# True 2-D (node, lam) mesh engine
+# --------------------------------------------------------------------------
+
+
+def make_node_lam_mesh(n_node: int, n_lam: Optional[int] = None) -> Mesh:
+    """2-D device mesh with named axes ("node", "lam")."""
+    from repro.launch.mesh import make_node_lam_mesh as _make
+    return _make(n_node, n_lam)
+
+
+@functools.lru_cache(maxsize=64)
+def build_mesh_path(m: int, p: int, C: int, cfg: ADMMConfig, mesh: Mesh,
+                    schedule: str = "gather", mode: str = "batched",
+                    tol: float = 1e-6, stop_rule: str = "kkt",
+                    with_masks: bool = False):
+    """Build the 2-D (node, lam) shard_map program.  Cached on all
+    arguments (jit caches by function identity — a fresh closure per call
+    would recompile every time).
+
+    Grid *cells* — (lambda, sample-mask) pairs when ``with_masks``, so CV
+    folds ride the same axis as plain grid points — are sharded over
+    "lam"; node state over "node".  Fits AND scoring run inside the one
+    program: per cell it returns (modified BIC on the in-mask data,
+    held-out hinge on the mask complement), reduced over the node axis
+    with psum.  Without masks the gradient skips the masking entirely
+    (every sample counts; held-out hinge is 0).
+
+    Returns a jitted fn
+      (X, y, W, deg, cell_lams (C,), cell_rho (C, m), lam_weights (p,)
+       [, cell_masks (C, m, n)]) -> (path (C, m, p), scores (C, 2),
+                                     iters (C,)).
+
+    mode "batched": all local cells advance in lockstep (vmap), cold start,
+    cfg.max_iter rounds — trajectories match the dense batched engine.
+    mode "warm": sequential continuation over each device's local cell
+    block with early stop on ``stop_rule`` ("kkt" residual or legacy
+    "progress"), the stop decision pmax-agreed across the node axis.
+    Continuation follows decreasing lambda; wherever lambda jumps back up
+    (a full-data/fold block boundary under CV) the fit restarts cold.
+    """
+    if mode not in ("warm", "batched"):
+        raise ValueError(f"mode {mode!r} not in ('warm', 'batched')")
+    if stop_rule not in ("kkt", "progress"):
+        raise ValueError(f"stop_rule {stop_rule!r} not in ('kkt', 'progress')")
+    nn, nl = mesh.shape["node"], mesh.shape["lam"]
+    assert m % nn == 0, f"m={m} must be divisible by node axis={nn}"
+    assert C % nl == 0, f"cells={C} must be divisible by lam axis={nl}"
+    import math as _math
+
+    def prog(Xl, yl, Wl, degl, cell_lams, cell_rho, lamw, cell_masks=None):
+        step = solver.make_step(cfg, _neighbor_sum_fn(schedule, nn, Wl))
+        m_local, n, _ = Xl.shape
+        C_local = cell_lams.shape[0]
+        cells = ((cell_lams, cell_rho) if cell_masks is None
+                 else (cell_lams, cell_rho, cell_masks))
+
+        def cell_problem(rhoc, maskc):
+            return _local_problem(Xl, yl, degl, rhoc, cfg, mask=maskc)
+
+        if mode == "batched":
+
+            def fit_cell(B0, P0, prog0, lam, rhoc, maskc=None):
+                prob = cell_problem(rhoc, maskc)
+                state = solver.SolverState(B0, P0,
+                                           jnp.zeros((), jnp.int32), prog0)
+                final = solver.run_fixed(step, prob, lam, lamw,
+                                         num_iters=cfg.max_iter, state=state)
+                return final.B, final.t
+
+            B0 = _pvary(jnp.zeros((C_local, m_local, p), Xl.dtype),
+                        ("node", "lam"))
+            P0 = _pvary(jnp.zeros((C_local, m_local, p), Xl.dtype),
+                        ("node", "lam"))
+            prog0 = _pvary(jnp.full((C_local,), jnp.inf, Xl.dtype),
+                           ("node", "lam"))
+            path, iters = jax.vmap(fit_cell)(B0, P0, prog0, *cells)
+        else:
+            residual_fn = (solver.kkt_residual_fn(cfg, axis_name="node")
+                           if stop_rule == "kkt" else None)
+
+            def outer(carry, cell):
+                B_prev, lam_prev = carry
+                lam, rhoc = cell[0], cell[1]
+                maskc = cell[2] if len(cell) == 3 else None
+                # Continuation only helps while lambda decreases; at a
+                # full-data/fold block boundary lambda jumps back up to
+                # lam_max, where warm-starting from a small-lambda dense
+                # solution works against convergence — restart cold there.
+                B_init = jnp.where(lam <= lam_prev, B_prev,
+                                   jnp.zeros_like(B_prev))
+                prob = cell_problem(rhoc, maskc)
+                P0 = _pvary(jnp.zeros((m_local, p), Xl.dtype),
+                            ("node", "lam"))
+                prog0 = _pvary(jnp.asarray(jnp.inf, Xl.dtype),
+                               ("node", "lam"))
+                state = solver.SolverState(B_init, P0,
+                                           jnp.zeros((), jnp.int32), prog0)
+                final = solver.run_tol(step, prob, lam, lamw,
+                                       max_iter=cfg.max_iter, tol=tol,
+                                       state=state, residual_fn=residual_fn,
+                                       axis_name="node")
+                return (final.B, lam), (final.B, final.t)
+
+            B0 = _pvary(jnp.zeros((m_local, p), Xl.dtype), ("node", "lam"))
+            lam0 = jnp.asarray(jnp.inf, Xl.dtype)
+            _, (path, iters) = jax.lax.scan(outer, (B0, lam0), cells)
+
+        # -- fused scoring (modified BIC + held-out hinge), psum over nodes
+        N_total = m * n
+        margins = jnp.einsum("mnp,cmp->cmn", Xl, path) * yl[None]
+        hinge = jnp.maximum(1.0 - margins, 0.0)              # (C_local, m, n)
+        if cell_masks is None:
+            hinge_in = jax.lax.psum(jnp.sum(hinge, axis=(1, 2)), "node")
+            n_in = jnp.asarray(N_total, Xl.dtype)
+            val_hinge = jnp.zeros((C_local,), Xl.dtype)
+        else:
+            hinge_in = jax.lax.psum(
+                jnp.sum(hinge * cell_masks, axis=(1, 2)), "node")
+            val = 1.0 - cell_masks
+            hinge_out = jax.lax.psum(jnp.sum(hinge * val, axis=(1, 2)),
+                                     "node")
+            n_out = jax.lax.psum(jnp.sum(val, axis=(1, 2)), "node")
+            n_in = jax.lax.psum(jnp.sum(cell_masks, axis=(1, 2)), "node")
+            val_hinge = hinge_out / jnp.maximum(n_out, 1.0)
+        supp = jax.lax.psum(
+            jnp.sum((jnp.abs(path) > 1e-8).astype(Xl.dtype), axis=(1, 2)),
+            "node")
+        bic = (hinge_in / n_in
+               + _math.sqrt(_math.log(N_total)) * _math.log(p)
+               * (supp / m) / N_total)
+        scores = jnp.stack([bic, val_hinge], axis=-1)        # (C_local, 2)
+        return path, scores, iters
+
+    base_specs = (P("node"), P("node"), P("node"), P("node"),
+                  P("lam"), P("lam", "node"), P())
+    in_specs = base_specs + ((P("lam", "node"),) if with_masks else ())
+    fn = _shard_map_no_rep_check(
+        prog, mesh=mesh, in_specs=in_specs,
+        out_specs=(P("lam", "node"), P("lam"), P("lam")))
+    return jax.jit(fn)
+
+
+def decsvm_path_mesh(X: Array, y: Array, W: np.ndarray, lams,
+                     cfg: ADMMConfig, mesh: Optional[Mesh] = None,
+                     schedule: str = "gather", mode: str = "batched",
+                     tol: float = 1e-6,
+                     lam_weights: Optional[Array] = None,
+                     stop_rule: str = "kkt", criterion: str = "bic",
+                     cv_folds: int = 5, cv_seed: int = 0):
+    """Lambda path on a true 2-D (node, lam) device mesh, with selection.
+
+    The L-point grid is sharded over the "lam" mesh axis (today's 1-D
+    engine carries all L per device); with ``criterion="cv"`` the k-fold
+    train masks join the grid as extra cells — L*(1+k) cells total — so
+    full-data fits, fold fits, and both scoring rules run inside one
+    shard_map program.  Returns ``repro.core.path.PathResult`` whose
+    ``criteria`` is the selected rule's score per grid point.
+
+    Requires m % node-axis == 0 and #cells % lam-axis == 0.
+    cfg.lam is ignored (the grid supplies lambda).
+    """
+    from repro.core.path import PathResult  # local import: avoid cycle
+
+    m, n, p = X.shape
+    lams = np.asarray(lams, np.float32)
+    L = len(lams)
+    if criterion not in ("bic", "cv"):
+        raise ValueError(f"criterion {criterion!r} not in ('bic', 'cv')")
+
+    rho_full = solver.compute_rho(X, cfg.h, cfg.kernel, cfg.rho_safety)
+    if criterion == "cv":
+        from repro.core.tuning import kfold_masks  # local: avoid cycle
+        folds = kfold_masks(m, n, cv_folds, seed=cv_seed)     # (k, m, n)
+        ones = np.ones((L, m, n), np.float32)
+        cell_masks = jnp.asarray(np.concatenate(
+            [ones] + [np.broadcast_to(f, (L, m, n)) for f in folds]), X.dtype)
+        cell_lams = np.concatenate([lams] * (1 + cv_folds))
+        fold_rho = jax.jit(jax.vmap(
+            lambda mk: solver.compute_rho(X, cfg.h, cfg.kernel,
+                                          cfg.rho_safety, mask=mk)))(
+            jnp.asarray(folds, X.dtype))                      # (k, m)
+        cell_rho = jnp.concatenate(
+            [jnp.broadcast_to(rho_full, (L, m))]
+            + [jnp.broadcast_to(r, (L, m)) for r in fold_rho])
+    else:
+        cell_masks, cell_lams = None, lams
+        cell_rho = jnp.broadcast_to(rho_full, (L, m))
+    C = len(cell_lams)
+
+    if mesh is None:
+        nn, nl = _choose_mesh_shape(m, C, len(jax.devices()))
+        mesh = make_node_lam_mesh(nn, nl)
+
+    if schedule == "ring":
+        _assert_ring(W)
+    Wj = jnp.asarray(W, X.dtype)
+    deg = jnp.sum(Wj, axis=1)
+
+    X_s = jax.device_put(X, NamedSharding(mesh, P("node")))
+    y_s = jax.device_put(y, NamedSharding(mesh, P("node")))
+    rho_s = jax.device_put(cell_rho, NamedSharding(mesh, P("lam", "node")))
+    lams_s = jax.device_put(jnp.asarray(cell_lams, X.dtype),
+                            NamedSharding(mesh, P("lam")))
+    operands = [X_s, y_s, Wj, deg, lams_s, rho_s,
+                _lamw(lam_weights, p, X.dtype)]
+    if cell_masks is not None:
+        operands.append(jax.device_put(
+            cell_masks, NamedSharding(mesh, P("lam", "node"))))
+
+    fitted = build_mesh_path(m, p, C, cfg, mesh, schedule, mode, tol,
+                             stop_rule, with_masks=cell_masks is not None)
+    path_cells, scores, iters = fitted(*operands)
+
+    path = path_cells[:L]
+    if criterion == "cv":
+        criteria = jnp.mean(
+            scores[L:, 1].reshape(cv_folds, L), axis=0)       # held-out hinge
+    else:
+        criteria = scores[:L, 0]                              # modified BIC
+    i = jnp.argmin(criteria)
+    lams_j = jnp.asarray(lams, X.dtype)
+    return PathResult(lams_j[i], path[i], lams_j, path, criteria, iters[:L])
+
+
+def _choose_mesh_shape(m: int, C: int, ndev: int):
+    """Pick (node, lam) axis sizes: use every device, maximize balance."""
+    best = None
+    for nn in range(1, ndev + 1):
+        if ndev % nn:
+            continue
+        nl = ndev // nn
+        if m % nn or C % nl:
+            continue
+        key = (min(nn, nl), nl)        # balanced first, then grid-parallel
+        if best is None or key > best[0]:
+            best = (key, (nn, nl))
+    if best is None:
+        raise ValueError(
+            f"no (node, lam) split of {ndev} devices divides m={m} and "
+            f"cells={C}; pass an explicit mesh")
+    return best[1]
 
 
 def _assert_ring(W: np.ndarray) -> None:

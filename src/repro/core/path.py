@@ -1,11 +1,9 @@
 """Batched regularization-path engine: Algorithm 1 over a whole lambda grid
 on-device (paper Section 4.1 tuning, executed without host round-trips).
 
-``tuning.select_lambda`` is the reference *cold* traversal: a host-side
-Python loop that refits every lambda from zero.  Because ``ADMMConfig.lam``
-is a static jit argument, the cold loop also pays one XLA compile per grid
-point — the dominant cost of a tuned deCSVM fit.  This module provides two
-on-device traversals that compile exactly once for the whole grid:
+Every traversal below drives the unified step of ``repro.core.solver``
+(the update math lives there, once); this module contributes the grid
+orchestration and the fused selection criteria:
 
 - ``decsvm_path_batched``: ``vmap`` the ADMM iteration over lambda.  All
   grid points advance in lockstep for ``cfg.max_iter`` rounds; per-lambda
@@ -14,15 +12,23 @@ on-device traversals that compile exactly once for the whole grid:
   sequential reference matters.
 - ``decsvm_path_warm``: ``lax.scan`` over *decreasing* lambda, seeding each
   fit with the previous solution (assumption A7 admits any warm start) and
-  stopping early per lambda once the iterate stops moving (the residual
-  rule of ``admm_adaptive.decsvm_fit_tol``).  Adjacent grid points share
-  support, so late fits converge in a handful of rounds — the fastest
-  traversal, at the price of early-stop-sized deviations from the cold
-  reference.
+  early-stopping per grid point.  The default stop rule is the
+  KKT/duality-gap residual of ``solver.kkt_residual`` — it measures actual
+  optimality of the running iterate, so a warm-started fit stops at the
+  same solution quality as a cold one (the legacy iterate-progress rule,
+  which stops whenever the iterate crawls and let warm fits deviate from
+  cold by the tolerance when ``max_iter`` was small, remains available as
+  ``stop_rule="progress"``).
+- ``decsvm_path_cv``: k-fold cross-validation fused with the traversal —
+  every (fold, lambda) fit runs in the same compiled program via the solver
+  core's masked-gradient backend, and the held-out hinge loss is scored
+  on-device.
 
-``decsvm_path_select`` fuses modified-BIC scoring (``tuning.modified_bic``
-ported to jnp) into the same compiled program and returns
-``(best_lam, best_B, path, criteria)`` as device arrays.
+``decsvm_path_select`` fuses modified-BIC (``tuning.modified_bic_jnp``) or
+cross-validation scoring into the same program and returns
+``(best_lam, best_B, path, criteria)`` as device arrays.  The sharded
+counterparts (node-sharded and true 2-D node x lambda meshes) live in
+``repro.core.decentral``.
 """
 from __future__ import annotations
 
@@ -32,46 +38,20 @@ from typing import NamedTuple, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core.admm import (ADMMConfig, compute_rho, local_gradient,
-                             soft_threshold)
+from repro.core import solver
+from repro.core.admm import ADMMConfig
 from repro.core.tuning import modified_bic_jnp
 
 Array = jax.Array
 
 
 class PathResult(NamedTuple):
-    best_lam: Array   # ()      grid point minimizing the modified BIC
+    best_lam: Array   # ()      grid point minimizing the criterion
     best_B: Array     # (m, p)  node estimates at best_lam
     lams: Array       # (L,)    the grid, as traversed
     path: Array       # (L, m, p) solutions at every grid point
-    criteria: Array   # (L,)    modified BIC per grid point
+    criteria: Array   # (L,)    selection criterion (modified BIC / CV hinge)
     iters: Array      # (L,)    ADMM rounds actually run per grid point
-
-
-def _path_step(X: Array, y: Array, W: Array, deg: Array, rho: Array,
-               omega: Array, cfg: ADMMConfig, B: Array, P: Array, lam,
-               lam_weights: Optional[Array]):
-    """One Algorithm-1 round with lambda as a *traced* scalar.
-
-    Identical math to ``admm.admm_step``; split out because the path engine
-    must vmap/scan over lambda, which a static ``cfg.lam`` cannot express.
-    """
-    grads = jax.vmap(local_gradient, in_axes=(0, 0, 0, None, None))(
-        X, y, B, cfg.h, cfg.kernel)
-    neigh = W @ B
-    z = (rho[:, None] * B - grads - P
-         + cfg.tau * (deg[:, None] * B + neigh))
-    lam_vec = lam if lam_weights is None else lam * lam_weights[None, :]
-    B_new = soft_threshold(omega[:, None] * z, lam_vec * omega[:, None])
-    P_new = P + cfg.tau * (deg[:, None] * B_new - W @ B_new)
-    return B_new, P_new
-
-
-def _grid_setup(X: Array, W: Array, cfg: ADMMConfig):
-    deg = jnp.sum(W, axis=1)
-    rho = compute_rho(X, cfg.h, cfg.kernel, cfg.rho_safety)
-    omega = 1.0 / (2.0 * cfg.tau * deg + rho + cfg.lam0)
-    return deg, rho, omega
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
@@ -83,62 +63,46 @@ def decsvm_path_batched(X: Array, y: Array, W: Array, lams: Array,
     X: (m, n, p), y: (m, n), W: (m, m), lams: (L,).
     Returns the path B: (L, m, p).  cfg.lam is ignored.
     """
-    m, _, p = X.shape
-    deg, rho, omega = _grid_setup(X, W, cfg)
+    prob = solver.make_problem(X, y, W, cfg)
+    step = solver.make_step(cfg, lambda B: W @ B)
     lams = jnp.asarray(lams, X.dtype)
 
     def fit_one(lam):
-        B0 = jnp.zeros((m, p), X.dtype)
-        P0 = jnp.zeros((m, p), X.dtype)
-
-        def body(carry, _):
-            B, P = carry
-            return _path_step(X, y, W, deg, rho, omega, cfg, B, P, lam,
-                              lam_weights), None
-
-        (B, _), _ = jax.lax.scan(body, (B0, P0), None, length=cfg.max_iter)
-        return B
+        return solver.run_fixed(step, prob, lam, lam_weights,
+                                num_iters=cfg.max_iter).B
 
     return jax.vmap(fit_one)(lams)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
+@functools.partial(jax.jit, static_argnames=("cfg", "stop_rule"))
 def decsvm_path_warm(X: Array, y: Array, W: Array, lams: Array,
                      cfg: ADMMConfig, tol: float = 1e-6,
-                     lam_weights: Optional[Array] = None):
+                     lam_weights: Optional[Array] = None,
+                     stop_rule: str = "kkt"):
     """Sequential continuation over *decreasing* lambda with warm starts.
 
     Each grid point seeds B from the previous solution (duals restart at
-    zero) and early-stops once max|B_t - B_{t-1}| <= tol, exactly the
-    residual rule of ``admm_adaptive.decsvm_fit_tol``.
+    zero) and early-stops once the stop statistic <= tol: the
+    KKT/duality-gap residual by default (``stop_rule="kkt"``), or the
+    legacy iterate-progress rule max|B_t - B_{t-1}| (``"progress"``).
     Returns (path (L, m, p), iters (L,)).  cfg.lam is ignored.
     """
-    m, _, p = X.shape
-    deg, rho, omega = _grid_setup(X, W, cfg)
+    if stop_rule not in ("kkt", "progress"):
+        raise ValueError(f"stop_rule {stop_rule!r} not in ('kkt', 'progress')")
+    prob = solver.make_problem(X, y, W, cfg)
+    step = solver.make_step(cfg, lambda B: W @ B)
     lams = jnp.asarray(lams, X.dtype)
-
-    def fit_at(lam, B_init):
-        P0 = jnp.zeros((m, p), X.dtype)
-
-        def cond(carry):
-            _B, _P, t, progress = carry
-            return (t < cfg.max_iter) & (progress > tol)
-
-        def body(carry):
-            B, P, t, _ = carry
-            B_new, P_new = _path_step(X, y, W, deg, rho, omega, cfg, B, P,
-                                      lam, lam_weights)
-            return B_new, P_new, t + 1, jnp.max(jnp.abs(B_new - B))
-
-        init = (B_init, P0, jnp.zeros((), jnp.int32),
-                jnp.asarray(jnp.inf, X.dtype))
-        B, _, t, _ = jax.lax.while_loop(cond, body, init)
-        return B, t
+    residual_fn = (solver.kkt_residual_fn(cfg) if stop_rule == "kkt"
+                   else None)
 
     def outer(B_carry, lam):
-        B, t = fit_at(lam, B_carry)
-        return B, (B, t)
+        state = solver.init_state(prob, B0=B_carry)
+        final = solver.run_tol(step, prob, lam, lam_weights,
+                               max_iter=cfg.max_iter, tol=tol, state=state,
+                               residual_fn=residual_fn)
+        return final.B, (final.B, final.t)
 
+    m, _, p = X.shape
     B0 = jnp.zeros((m, p), X.dtype)
     _, (path, iters) = jax.lax.scan(outer, B0, lams)
     return path, iters
@@ -150,14 +114,50 @@ def score_path(X: Array, y: Array, path: Array) -> Array:
     return jax.vmap(lambda B: modified_bic_jnp(X, y, B))(path)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "mode"))
-def _path_select(X, y, W, lams, cfg, mode, tol, lam_weights):
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def decsvm_path_cv(X: Array, y: Array, W: Array, lams: Array,
+                   cfg: ADMMConfig, masks: Array,
+                   lam_weights: Optional[Array] = None) -> Array:
+    """k-fold cross-validation scores fused with the path traversal.
+
+    masks: (k, m, n) train masks in {0,1} (``tuning.kfold_masks``); fold j
+    fits on mask rows and scores the held-out hinge loss on the complement.
+    Every (fold, lambda) fit is cold-started lockstep (batched semantics)
+    inside one compiled program.  Returns cv (L,): mean held-out hinge per
+    grid point — lower is better.
+    """
+    lams = jnp.asarray(lams, X.dtype)
+    step = solver.make_step(cfg, lambda B: W @ B)
+
+    def fold_scores(mask):
+        prob = solver.make_problem(X, y, W, cfg, mask=mask)
+
+        def fit_one(lam):
+            return solver.run_fixed(step, prob, lam, lam_weights,
+                                    num_iters=cfg.max_iter).B
+
+        path = jax.vmap(fit_one)(lams)                      # (L, m, p)
+        val = 1.0 - mask                                    # held-out rows
+        margins = jnp.einsum("mnp,lmp->lmn", X, path) * y[None]
+        hinge = jnp.maximum(1.0 - margins, 0.0) * val[None]
+        return jnp.sum(hinge, axis=(1, 2)) / jnp.maximum(jnp.sum(val), 1.0)
+
+    return jnp.mean(jax.vmap(fold_scores)(masks), axis=0)   # (L,)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "mode", "stop_rule"))
+def _path_select(X, y, W, lams, cfg, mode, tol, lam_weights, stop_rule,
+                 cv_masks):
     if mode == "batched":
         path = decsvm_path_batched(X, y, W, lams, cfg, lam_weights)
         iters = jnp.full((path.shape[0],), cfg.max_iter, jnp.int32)
     else:
-        path, iters = decsvm_path_warm(X, y, W, lams, cfg, tol, lam_weights)
-    crits = score_path(X, y, path)
+        path, iters = decsvm_path_warm(X, y, W, lams, cfg, tol, lam_weights,
+                                       stop_rule=stop_rule)
+    if cv_masks is None:
+        crits = score_path(X, y, path)
+    else:
+        crits = decsvm_path_cv(X, y, W, lams, cfg, cv_masks, lam_weights)
     i = jnp.argmin(crits)
     lams = jnp.asarray(lams, X.dtype)
     return PathResult(lams[i], path[i], lams, path, crits, iters)
@@ -166,15 +166,30 @@ def _path_select(X, y, W, lams, cfg, mode, tol, lam_weights):
 def decsvm_path_select(X: Array, y: Array, W: Array,
                        lams: Array | Sequence[float], cfg: ADMMConfig,
                        mode: str = "warm", tol: float = 1e-6,
-                       lam_weights: Optional[Array] = None) -> PathResult:
-    """Traverse the grid and pick lambda by modified BIC, in one program.
+                       lam_weights: Optional[Array] = None,
+                       stop_rule: str = "kkt",
+                       criterion: str = "bic",
+                       cv_folds: int = 5, cv_seed: int = 0) -> PathResult:
+    """Traverse the grid and pick lambda, in one compiled program.
 
     mode: "warm" (continuation + early stop, fastest) or "batched"
-    (cold-start lockstep, matches the sequential reference).  The whole
-    path, its criteria, and the argmin stay on device; nothing forces a
-    host sync until the caller reads the result.
+    (cold-start lockstep, matches the sequential reference).
+    criterion: "bic" (modified BIC of Zhang et al. 2016) or "cv" (k-fold
+    held-out hinge, ``cv_folds`` folds).  The whole path, its criteria,
+    and the argmin stay on device; nothing forces a host sync until the
+    caller reads the result.
     """
     if mode not in ("warm", "batched"):
         raise ValueError(f"mode {mode!r} not in ('warm', 'batched')")
+    if stop_rule not in ("kkt", "progress"):
+        raise ValueError(f"stop_rule {stop_rule!r} not in ('kkt', 'progress')")
+    if criterion not in ("bic", "cv"):
+        raise ValueError(f"criterion {criterion!r} not in ('bic', 'cv')")
+    cv_masks = None
+    if criterion == "cv":
+        from repro.core.tuning import kfold_masks  # local import: avoid cycle
+        m, n = X.shape[0], X.shape[1]
+        cv_masks = jnp.asarray(kfold_masks(m, n, cv_folds, seed=cv_seed),
+                               X.dtype)
     return _path_select(X, y, W, jnp.asarray(lams), cfg, mode, tol,
-                        lam_weights)
+                        lam_weights, stop_rule, cv_masks)

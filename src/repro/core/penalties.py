@@ -5,8 +5,11 @@ SCAD (Fan & Li 2001), MCP (Zhang 2010) and the adaptive lasso (Zou 2006)
 "via a straightforward linear approximation" (Zou & Li 2008).  The LLA
 recipe: fit the l1 solution (stage 1), then re-fit with per-coordinate
 penalty weights lam_j = pen'(|beta_j^(1)|; lam) / lam (stage 2).  The
-per-coordinate weights multiply the soft-threshold level in update (7a'),
-so the stage-2 solve reuses Algorithm 1 unchanged.
+per-coordinate weights multiply the soft-threshold level of the unified
+Algorithm-1 step (``repro.core.solver``), so *every* engine — dense,
+Pallas, node-sharded, 2-D mesh — runs the stage-2 solve unchanged
+(``engine="sharded"`` routes both stages through
+``repro.core.decentral``).
 """
 from __future__ import annotations
 
@@ -15,6 +18,7 @@ from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.admm import ADMMConfig, decsvm_fit
 
@@ -50,15 +54,21 @@ PENALTIES = {
 def decsvm_fit_lla(X: Array, y: Array, W: Array, cfg: ADMMConfig,
                    penalty: str = "scad",
                    lams: Optional[Sequence[float]] = None,
-                   path_mode: str = "warm", **pen_kwargs):
+                   path_mode: str = "warm", engine: str = "dense",
+                   mesh=None, schedule: str = "gather", **pen_kwargs):
     """Two-stage LLA: l1 pilot -> penalty-weighted re-fit.
 
-    When ``lams`` is given, the stage-1 pilot comes from the batched
-    lambda-path engine: the grid is traversed on-device
-    (``repro.core.path``), the modified BIC picks lambda, and both the
-    pilot and the stage-2 penalty level use the selected value — one
+    When ``lams`` is given, the stage-1 pilot comes from the lambda-path
+    engine — ``repro.core.path`` for ``engine="dense"``, the 2-D
+    node x lambda mesh (``decentral.decsvm_path_mesh``) for
+    ``engine="sharded"`` — the modified BIC picks lambda, and both the
+    pilot and the stage-2 penalty level use the selected value: one
     compiled program instead of a per-lambda refit loop.  Otherwise the
     pilot is a single l1 fit at ``cfg.lam``.
+
+    engine: "dense" (single-process) or "sharded" (node state sharded via
+    ``repro.core.decentral``; the stage-2 per-coordinate ``lam_weights``
+    ride the sharded step unchanged).
 
     Weights are computed from the network-average pilot (each node can form
     it with one extra all-reduce round in deployment).
@@ -66,15 +76,33 @@ def decsvm_fit_lla(X: Array, y: Array, W: Array, cfg: ADMMConfig,
     """
     if penalty not in PENALTIES:
         raise ValueError(f"penalty {penalty!r} not in {sorted(PENALTIES)}")
+    if engine not in ("dense", "sharded"):
+        raise ValueError(f"engine {engine!r} not in ('dense', 'sharded')")
     if lams is not None:
-        from repro.core import path as path_mod  # local import: avoid cycle
-        res = path_mod.decsvm_path_select(X, y, W, jnp.asarray(lams), cfg,
-                                          mode=path_mode)
+        if engine == "sharded":
+            from repro.core import decentral  # local import: avoid cycle
+            res = decentral.decsvm_path_mesh(
+                X, y, np.asarray(W), np.asarray(lams), cfg, mesh=mesh,
+                schedule=schedule, mode=path_mode)
+        else:
+            from repro.core import path as path_mod  # local: avoid cycle
+            res = path_mod.decsvm_path_select(X, y, W, jnp.asarray(lams),
+                                              cfg, mode=path_mode)
         cfg = dataclasses.replace(cfg, lam=float(res.best_lam))
         B1 = res.best_B
+    elif engine == "sharded":
+        from repro.core import decentral  # local import: avoid cycle
+        B1 = decentral.decsvm_fit_sharded(X, y, np.asarray(W), cfg,
+                                          mesh=mesh, schedule=schedule)
     else:
         B1 = decsvm_fit(X, y, W, cfg)
     pilot = jnp.mean(B1, axis=0)
     w = PENALTIES[penalty](pilot, cfg.lam, **pen_kwargs)
-    B2 = decsvm_fit(X, y, W, cfg, lam_weights=w)
+    if engine == "sharded":
+        from repro.core import decentral  # local import: avoid cycle
+        B2 = decentral.decsvm_fit_sharded(X, y, np.asarray(W), cfg,
+                                          mesh=mesh, schedule=schedule,
+                                          lam_weights=w)
+    else:
+        B2 = decsvm_fit(X, y, W, cfg, lam_weights=w)
     return B2, w

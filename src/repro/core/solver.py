@@ -1,0 +1,316 @@
+"""The single home of Algorithm 1: one state pytree, one per-node update,
+one traced-``(lam, lam_weights)`` step, pluggable everything else.
+
+Every solver surface in this repo — ``admm.decsvm_fit`` (dense),
+``admm_adaptive.decsvm_fit_tol`` / ``decsvm_fit_uneven``,
+``path.decsvm_path_batched`` / ``decsvm_path_warm`` (lambda grid),
+``decentral.decsvm_fit_sharded`` / ``decsvm_path_sharded`` /
+``decsvm_path_mesh`` (shard_map engines), the LLA stage-2 re-fit in
+``penalties``, and the Pallas oracle in ``kernels.ref`` — is a thin driver
+over this module.  The update math exists exactly once
+(``local_update`` and the ``soft_threshold(omega * z, ...)`` line inside
+it), so the engines are the same algorithm *by construction*; the parity
+suite (``tests/test_solver.py``) checks the drivers, not per-pair math.
+
+Pluggable pieces of ``make_step``:
+
+- **neighbour sum** (callable ``B -> (m, p)``): dense ``W @ B``
+  (single process), ``all_gather`` + local adjacency rows (sharded, any
+  graph), or ``ppermute`` of shard-boundary rows (sharded ring).  The
+  step calls it twice per round — once for the primal update, once for
+  the dual — exactly update (7a')/(7b).
+- **local-gradient backend**: the jnp reference (``local_update``,
+  optionally sample-masked for uneven n / cross-validation folds) or the
+  fused Pallas TPU kernel (``kernels.ops.csvm_local_update``).
+
+Update (per node l, with deg_l = |N(l)|):
+    grad_l = (1/n) sum_i L_h'(y_i x_i' b_l) y_i x_i
+    z_l    = rho_l b_l - grad_l - p_l + tau * (deg_l * b_l + (W B)_l)
+    b+_l   = S_{lam * w_l}( w_l * z_l ),   w_l = 1/(2 tau deg_l + rho_l + lam0)
+    p+_l   = p_l + tau * (deg_l * b+_l - (W B+)_l)
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import losses
+
+Array = jax.Array
+
+
+def soft_threshold(v: Array, t) -> Array:
+    """Coordinate-wise soft-thresholding S_t(v)."""
+    return jnp.sign(v) * jnp.maximum(jnp.abs(v) - t, 0.0)
+
+
+def power_iteration_lmax(X: Array, iters: int = 50) -> Array:
+    """Largest eigenvalue of X'X/n, matrix-free (X: (n, p))."""
+    n = X.shape[0]
+    v = jnp.full((X.shape[1],), 1.0 / jnp.sqrt(X.shape[1]), X.dtype)
+
+    def body(v, _):
+        w = X.T @ (X @ v) / n
+        return w / (jnp.linalg.norm(w) + 1e-30), None
+
+    v, _ = jax.lax.scan(body, v, None, length=iters)
+    w = X.T @ (X @ v) / n
+    return jnp.vdot(v, w) / (jnp.vdot(v, v) + 1e-30)
+
+
+def compute_rho(X: Array, h: float, kernel: str, safety: float = 1.05,
+                mask: Optional[Array] = None) -> Array:
+    """rho_l >= c_h * Lmax(X_l'X_l/n_l) per node.  X: (m, n, p).
+
+    With a sample ``mask`` (m, n), masked rows are zeroed and n_l is the
+    per-node mask sum (the uneven-n extension of Section 2.1).
+    """
+    c_h = losses.get_kernel(kernel).lipschitz(h)
+    if mask is None:
+        lmax = jax.vmap(power_iteration_lmax)(X)
+    else:
+        Xm = X * mask[..., None]
+
+        def node_lmax(Xl, ml):
+            return power_iteration_lmax(Xl) * Xl.shape[0] / jnp.maximum(
+                jnp.sum(ml), 1.0)
+
+        lmax = jax.vmap(node_lmax)(Xm, mask)
+    return safety * c_h * lmax
+
+
+class SolverState(NamedTuple):
+    """Algorithm-1 iterate: shared by every driver in the repo."""
+    B: Array          # (m, p) primal node estimates (local block when sharded)
+    P: Array          # (m, p) accumulated duals  p_l = sum_k (u_lk + v_lk)
+    t: Array          # ()     iteration counter
+    progress: Array   # ()     stop statistic: max|B_t - B_{t-1}| (or a
+    #                          residual substituted by ``run_tol``)
+
+
+class Problem(NamedTuple):
+    """Static per-fit data: node-local design blocks plus the precomputed
+    per-node scalars of update (7a').  ``mask`` (m, n) marks real samples
+    for uneven-n / cross-validation fits; None means every row counts."""
+    X: Array                     # (m, n, p)
+    y: Array                     # (m, n)
+    deg: Array                   # (m,)
+    rho: Array                   # (m,)
+    omega: Array                 # (m,)
+    mask: Optional[Array] = None
+
+
+def make_problem(X: Array, y: Array, W: Array, cfg,
+                 mask: Optional[Array] = None,
+                 rho: Optional[Array] = None) -> Problem:
+    """Assemble a ``Problem`` from stacked node blocks and the adjacency."""
+    deg = jnp.sum(W, axis=1)
+    if rho is None:
+        rho = compute_rho(X, cfg.h, cfg.kernel, cfg.rho_safety, mask=mask)
+    omega = 1.0 / (2.0 * cfg.tau * deg + rho + cfg.lam0)
+    return Problem(X, y, deg, rho, omega, mask)
+
+
+def local_update(X: Array, y: Array, beta: Array, p_dual: Array,
+                 neigh_term: Array, rho, omega, lam_vec, *, h: float,
+                 kernel: str, mask: Optional[Array] = None) -> Array:
+    """THE Algorithm-1 primal update (7a') for a single node.
+
+    X: (n, p), y: (n,), beta/p_dual/neigh_term: (p,); rho/omega scalars;
+    lam_vec a scalar or (p,) per-coordinate l1 level; ``neigh_term`` is the
+    precomputed  tau * (deg_l * beta_l + sum_{k in N(l)} beta_k).
+    This function (and the fused Pallas kernel validated against it) is the
+    only place the update's math lives.
+    """
+    kern = losses.get_kernel(kernel)
+    margin = y * (X @ beta)
+    w = kern.dloss(margin, h) * y
+    if mask is None:
+        n_eff = X.shape[0]
+    else:
+        w = w * mask
+        n_eff = jnp.maximum(jnp.sum(mask), 1.0)
+    grad = X.T @ w / n_eff
+    z = rho * beta - grad - p_dual + neigh_term
+    return soft_threshold(omega * z, lam_vec * omega)
+
+
+def make_step(cfg, neighbor_sum: Callable[[Array], Array], *,
+              use_pallas: Optional[bool] = None):
+    """Build one traced-``(lam, lam_weights)`` Algorithm-1 round.
+
+    ``neighbor_sum(B) -> (m, p)`` supplies  (W B)_l = sum_{k in N(l)} b_k
+    for the node rows the caller holds (all of them in the dense engine, a
+    shard inside ``shard_map``).  ``use_pallas`` routes the local update
+    through the fused TPU kernel (default: ``cfg.use_pallas``).
+
+    Returns ``step(prob, state, lam, lam_weights=None) -> SolverState``
+    with lam a traced scalar and lam_weights an optional traced (p,)
+    per-coordinate multiplier (adaptive/SCAD/MCP via one-step LLA).
+    """
+    tau, h, kernel = cfg.tau, cfg.h, cfg.kernel
+    pallas = cfg.use_pallas if use_pallas is None else use_pallas
+
+    def step(prob: Problem, state: SolverState, lam,
+             lam_weights: Optional[Array] = None) -> SolverState:
+        B, P = state.B, state.P
+        neigh_term = tau * (prob.deg[:, None] * B + neighbor_sum(B))
+        p_dim = B.shape[-1]
+        if lam_weights is None:
+            lam_vec = jnp.broadcast_to(jnp.asarray(lam, B.dtype), (p_dim,))
+        else:
+            lam_vec = lam * lam_weights
+        # The fused kernel has no sample-mask operand: masked fits
+        # (uneven n, CV folds) must take the jnp reference backend or the
+        # held-out rows would silently count as real samples.
+        if pallas and prob.mask is None:
+            from repro.kernels import ops  # lazy: kernels dep is optional here
+            B_new = jax.vmap(
+                lambda Xl, yl, bl, pl_, nl, rl, wl: ops.csvm_local_update(
+                    Xl, yl, bl, pl_, nl, rl, wl, lam_vec, h=h, kernel=kernel)
+            )(prob.X, prob.y, B, P, neigh_term, prob.rho, prob.omega)
+        else:
+            in_axes = (0, 0, 0, 0, 0, 0, 0, None)
+            args = (prob.X, prob.y, B, P, neigh_term, prob.rho, prob.omega,
+                    lam_vec)
+            if prob.mask is None:
+                B_new = jax.vmap(
+                    lambda *a: local_update(*a, h=h, kernel=kernel),
+                    in_axes=in_axes)(*args)
+            else:
+                B_new = jax.vmap(
+                    lambda *a: local_update(*a[:-1], h=h, kernel=kernel,
+                                            mask=a[-1]),
+                    in_axes=in_axes + (0,))(*args, prob.mask)
+        P_new = P + tau * (prob.deg[:, None] * B_new - neighbor_sum(B_new))
+        return SolverState(B_new, P_new, state.t + 1,
+                           jnp.max(jnp.abs(B_new - B)))
+
+    return step
+
+
+def init_state(prob: Problem, B0: Optional[Array] = None,
+               P0: Optional[Array] = None) -> SolverState:
+    m, _, p = prob.X.shape
+    B = jnp.zeros((m, p), prob.X.dtype) if B0 is None else B0
+    P = jnp.zeros_like(B) if P0 is None else P0
+    return SolverState(B, P, jnp.zeros((), jnp.int32),
+                       jnp.asarray(jnp.inf, prob.X.dtype))
+
+
+def run_fixed(step, prob: Problem, lam, lam_weights=None, *,
+              num_iters: int, state: Optional[SolverState] = None,
+              track_history: bool = False):
+    """Drive ``step`` for a fixed number of rounds (lax.scan).
+
+    Returns the final ``SolverState``; with ``track_history`` also the
+    (T, m, p) iterate history.
+    """
+    state = init_state(prob) if state is None else state
+
+    def body(state, _):
+        new = step(prob, state, lam, lam_weights)
+        return new, (new.B if track_history else None)
+
+    final, hist = jax.lax.scan(body, state, None, length=num_iters)
+    if track_history:
+        return final, hist
+    return final
+
+
+def run_tol(step, prob: Problem, lam, lam_weights=None, *, max_iter: int,
+            tol: float, state: Optional[SolverState] = None,
+            residual_fn=None, axis_name: Optional[str] = None) -> SolverState:
+    """Drive ``step`` until ``max_iter`` OR the stop statistic <= tol.
+
+    The default statistic is iterate progress max|B_t - B_{t-1}|;
+    ``residual_fn(prob, state, lam, lam_weights)`` substitutes e.g. the
+    KKT residual (``kkt_residual``).  Inside ``shard_map``, pass
+    ``axis_name`` so every node shard agrees on the stop decision (the
+    statistic is pmax-reduced before the while condition reads it).
+    """
+    state = init_state(prob) if state is None else state
+
+    def cond(state):
+        return (state.t < max_iter) & (state.progress > tol)
+
+    def body(state):
+        new = step(prob, state, lam, lam_weights)
+        if residual_fn is not None:
+            new = new._replace(
+                progress=residual_fn(prob, new, lam, lam_weights))
+        if axis_name is not None:
+            new = new._replace(
+                progress=jax.lax.pmax(new.progress, axis_name))
+        return new
+
+    return jax.lax.while_loop(cond, body, state)
+
+
+def kkt_residual_fn(cfg, axis_name: Optional[str] = None):
+    """Adapter factory: the ``residual_fn`` shape ``run_tol`` expects,
+    closing over cfg (and the mesh axis for sharded drivers).  Shared by
+    every KKT-stopping driver so the adapter exists once."""
+    def fn(prob, state, lam, lam_weights):
+        return kkt_residual(prob, cfg, state.B, lam, lam_weights,
+                            axis_name=axis_name)
+    return fn
+
+
+def kkt_residual(prob: Problem, cfg, B: Array, lam,
+                 lam_weights: Optional[Array] = None, *,
+                 axis_name: Optional[str] = None) -> Array:
+    """KKT/duality-gap stop statistic for the network problem (eq. 3/4).
+
+    Measures actual optimality of the network-average iterate rather than
+    how fast the iterate is moving (the old progress rule stops whenever
+    the iterate crawls — even far from the optimum, the ROADMAP's
+    warm-path-deviates failure mode):
+
+      stationarity: the unit-step prox-gradient fixed-point residual at
+        beta_bar = mean_l b_l,
+          max_j | beta_bar_j - S_{lam_j}(beta_bar_j - g_j) |,
+        with g the network-mean smoothed-loss gradient plus
+        lam0 * beta_bar.  Zero exactly at a KKT point of eq. (3)/(4)
+        (summing the node stationarity conditions cancels the duals:
+        sum_l p_l = 0 every round), and — unlike the raw subgradient
+        residual — continuous in beta_bar, so consensus noise on a
+        truly-zero coordinate cannot inflate it by O(lam);
+      consensus:  max_l |b_l - beta_bar|.
+
+    Returns max(stationarity, consensus).  Inside ``shard_map`` pass the
+    node ``axis_name``; node means/maxes then reduce over the mesh axis.
+    """
+    local_mean = jnp.mean(B, axis=0)
+    beta_bar = (local_mean if axis_name is None
+                else jax.lax.pmean(local_mean, axis_name))
+
+    def node_grad(Xl, yl, ml):
+        kern = losses.get_kernel(cfg.kernel)
+        margin = yl * (Xl @ beta_bar)
+        w = kern.dloss(margin, cfg.h) * yl
+        if ml is not None:
+            w = w * ml
+            return Xl.T @ w / jnp.maximum(jnp.sum(ml), 1.0)
+        return Xl.T @ w / Xl.shape[0]
+
+    if prob.mask is None:
+        grads = jax.vmap(lambda Xl, yl: node_grad(Xl, yl, None))(
+            prob.X, prob.y)
+    else:
+        grads = jax.vmap(node_grad)(prob.X, prob.y, prob.mask)
+    g_local = jnp.mean(grads, axis=0)
+    g = g_local if axis_name is None else jax.lax.pmean(g_local, axis_name)
+    g = g + cfg.lam0 * beta_bar
+    p_dim = beta_bar.shape[-1]
+    if lam_weights is None:
+        lam_vec = jnp.broadcast_to(jnp.asarray(lam, beta_bar.dtype), (p_dim,))
+    else:
+        lam_vec = lam * lam_weights
+    stat = jnp.abs(beta_bar - soft_threshold(beta_bar - g, lam_vec))
+    cons_local = jnp.max(jnp.abs(B - beta_bar[None, :]))
+    cons = (cons_local if axis_name is None
+            else jax.lax.pmax(cons_local, axis_name))
+    return jnp.maximum(jnp.max(stat), cons)

@@ -1,5 +1,6 @@
 """Tuning-parameter selection: the modified BIC of Zhang et al. (2016)
-(paper Section 4.1) plus the Theorem-3 bandwidth rule.
+(paper Section 4.1), k-fold cross-validation, and the Theorem-3 bandwidth
+rule.
 
     BIC(lambda) = N^-1 sum_l sum_i (1 - y_i x_i' b_l)_+
                   + sqrt(log N) * log p * mean_l |supp(b_l)| / N
@@ -9,24 +10,34 @@ per-sample so the criterion is scale-consistent — noted in DESIGN.md).
 A gossip protocol would broadcast the two scalars in deployment; here the
 reduction is exact.
 
-Three ways to traverse the lambda grid, slowest to fastest:
+Ways to traverse the lambda grid:
 
 - **cold** (``select_lambda``): host Python loop, each lambda refit from
   zero through ``decsvm_fit``.  Since ``ADMMConfig.lam`` is static under
   jit this recompiles per grid point — it is the reference semantics, and
   the baseline the path engine is benchmarked against
-  (``benchmarks/bench_lambda_path.py``).
+  (``benchmarks/bench_lambda_path.py``).  Always the slowest.
 - **batched** (``repro.core.path.decsvm_path_batched``): one compile, all
   grid points advance in lockstep under ``vmap``.  Same trajectories as
-  cold (zero start, fixed iteration count); best when you need the full
-  path to match the reference or want maximal accelerator utilization.
+  cold (zero start, fixed iteration count); best accelerator utilization
+  at small scale, and the mode to use when the path must match the
+  reference.
 - **warm** (``repro.core.path.decsvm_path_warm``): one compile, sequential
   continuation over decreasing lambda with warm starts (A7) and per-lambda
-  early stopping.  Fewest total ADMM rounds — the production default —
-  but per-lambda solutions deviate from cold by up to the early-stop
-  tolerance.
+  early stopping — by default on the KKT/duality-gap residual, which
+  certifies solution quality but costs one extra network-gradient
+  evaluation per round.  Fewest total ADMM rounds; whether that beats
+  batched wall-clock depends on how aggressively the tolerance lets grid
+  points stop (see ``BENCH_lambda_path.json`` for the current trade).
+- **mesh** (``repro.core.decentral.decsvm_path_mesh``): the grid sharded
+  over a true 2-D (node, lam) device mesh; grid points stop multiplying
+  per-device memory and compute.
 
-``select_lambda_path`` wraps the on-device engine with this module's
+Selection criteria, both fused into the traversal's compiled program:
+the modified BIC above (``criterion="bic"``) and k-fold cross-validated
+held-out hinge loss (``criterion="cv"``, folds from ``kfold_masks``).
+
+``select_lambda_path`` wraps the on-device engines with this module's
 (best_lam, best_B, table) convention.
 """
 from __future__ import annotations
@@ -63,6 +74,25 @@ def modified_bic_jnp(X, y, B, tol: float = 1e-8):
     return hinge + math.sqrt(math.log(N)) * math.log(p) * mean_supp / N
 
 
+def kfold_masks(m: int, n: int, k: int, seed: int = 0) -> np.ndarray:
+    """(k, m, n) train masks in {0,1} for k-fold CV over each node's samples.
+
+    Fold assignment is a per-node random permutation of ``range(n)`` taken
+    mod k, so every fold holds out ~n/k samples *per node* (the network
+    analogue of stratified folds: no node ever loses all its data, which
+    would zero its local gradient).  mask==1 marks training rows; the
+    validation rows of fold j are the complement.
+    """
+    if not 2 <= k <= n:
+        raise ValueError(f"need 2 <= k <= n, got k={k}, n={n}")
+    rng = np.random.default_rng(seed)
+    fold_of = np.stack([rng.permutation(n) % k for _ in range(m)])  # (m, n)
+    masks = np.ones((k, m, n), np.float32)
+    for j in range(k):
+        masks[j][fold_of == j] = 0.0
+    return masks
+
+
 def lambda_grid(X: np.ndarray, y: np.ndarray, num: int = 12,
                 min_frac: float = 1e-3) -> np.ndarray:
     """Log-spaced grid below lambda_max = |X'y/N|_inf (all-zero threshold).
@@ -95,23 +125,40 @@ def select_lambda(fit_fn: Callable[[float], np.ndarray], X: np.ndarray,
 
 def select_lambda_path(X, y, W, cfg, lams: Optional[Sequence[float]] = None,
                        num: int = 12, mode: str = "warm", tol: float = 1e-6,
-                       lam_weights=None):
-    """On-device grid selection via ``repro.core.path``.
+                       lam_weights=None, criterion: str = "bic",
+                       cv_folds: int = 5, cv_seed: int = 0,
+                       stop_rule: str = "kkt", engine: str = "dense",
+                       mesh=None, schedule: str = "gather"):
+    """On-device grid selection via ``repro.core.path`` / ``decentral``.
 
     Builds ``lambda_grid(X, y, num)`` when ``lams`` is omitted, runs the
-    batched or warm-start traversal, and returns the same
-    (best_lam, best_B, table) triple as ``select_lambda`` — table rows are
-    (lambda, modified BIC, mean support size).  The full on-device
-    ``PathResult`` is returned as a fourth element.
+    batched or warm-start traversal, scores it with the modified BIC
+    (``criterion="bic"``) or k-fold cross-validation (``"cv"``), and
+    returns the same (best_lam, best_B, table) triple as
+    ``select_lambda`` — table rows are (lambda, criterion, mean support
+    size).  The full on-device ``PathResult`` is returned as a fourth
+    element.  ``engine="mesh"`` routes the traversal through the 2-D
+    (node, lam) device-mesh engine (``decentral.decsvm_path_mesh``).
     """
     from repro.core import path as path_mod  # local import: avoid cycle
 
     if lams is None:
         lams = lambda_grid(np.asarray(X), np.asarray(y), num=num)
-    res = path_mod.decsvm_path_select(jnp.asarray(X), jnp.asarray(y),
-                                      jnp.asarray(W), jnp.asarray(lams), cfg,
-                                      mode=mode, tol=tol,
-                                      lam_weights=lam_weights)
+    if engine == "mesh":
+        from repro.core import decentral  # local import: avoid cycle
+        res = decentral.decsvm_path_mesh(
+            jnp.asarray(X), jnp.asarray(y), np.asarray(W), lams, cfg,
+            mesh=mesh, schedule=schedule, mode=mode, tol=tol,
+            lam_weights=lam_weights, stop_rule=stop_rule,
+            criterion=criterion, cv_folds=cv_folds, cv_seed=cv_seed)
+    elif engine == "dense":
+        res = path_mod.decsvm_path_select(
+            jnp.asarray(X), jnp.asarray(y), jnp.asarray(W),
+            jnp.asarray(lams), cfg, mode=mode, tol=tol,
+            lam_weights=lam_weights, stop_rule=stop_rule,
+            criterion=criterion, cv_folds=cv_folds, cv_seed=cv_seed)
+    else:
+        raise ValueError(f"engine {engine!r} not in ('dense', 'mesh')")
     table = [(float(l), float(c), metrics.mean_support_size(np.asarray(B)))
              for l, c, B in zip(np.asarray(res.lams), np.asarray(res.criteria),
                                 np.asarray(res.path))]

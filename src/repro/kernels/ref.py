@@ -4,8 +4,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import losses
-from repro.core.admm import soft_threshold
+from repro.core import losses, solver
 
 Array = jax.Array
 
@@ -13,19 +12,17 @@ Array = jax.Array
 def decsvm_local_update(X: Array, y: Array, beta: Array, p_dual: Array,
                         neigh: Array, rho, omega, lam,
                         h: float, kernel: str = "epanechnikov") -> Array:
-    """Oracle for the fused ADMM local update (paper eq. 7a').
+    """Oracle for the fused ADMM local update (paper eq. 7a') — the
+    unified Algorithm-1 update of ``repro.core.solver``, verbatim (the
+    Pallas kernel is validated against the exact math every driver runs).
 
     X: (n, p), y: (n,), beta/p_dual/neigh: (p,); rho/omega scalars; lam a
     scalar or (p,) per-coordinate penalty vector.
     neigh is the precomputed tau * sum_{k in N(l)} (beta_l + beta_k) term.
     Returns beta_new (p,).
     """
-    kern = losses.get_kernel(kernel)
-    margin = y * (X @ beta)
-    w = kern.dloss(margin, h) * y / X.shape[0]
-    grad = X.T @ w
-    z = rho * beta - grad - p_dual + neigh
-    return soft_threshold(omega * z, lam * omega)
+    return solver.local_update(X, y, beta, p_dual, neigh, rho, omega, lam,
+                               h=h, kernel=kernel)
 
 
 def mha(q: Array, k: Array, v: Array, *, causal: bool = True,

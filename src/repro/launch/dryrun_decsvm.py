@@ -45,8 +45,9 @@ def run_one(m: int, n: int, p: int, schedule: str, multi_pod: bool,
     W = f((nodes, nodes), jnp.float32)
     deg = f((nodes,), jnp.float32)
     rho = f((nodes,), jnp.float32)
+    lamw = f((p + 1,), jnp.float32)   # per-coordinate l1 multipliers (LLA)
     t0 = time.time()
-    lowered = fitted.lower(X, y, W, deg, rho)
+    lowered = fitted.lower(X, y, W, deg, rho, lamw)
     compiled = lowered.compile()
     dt = time.time() - t0
     mem = compiled.memory_analysis()

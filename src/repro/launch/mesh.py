@@ -12,6 +12,18 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def make_node_lam_mesh(n_node: int, n_lam=None):
+    """2-D mesh with named axes ("node", "lam") for the deCSVM lambda-path
+    engine (``repro.core.decentral.decsvm_path_mesh``): network nodes are
+    sharded over "node" (the paper's communication axis — collectives run
+    only here), lambda grid cells over "lam" (embarrassingly parallel).
+    """
+    n = len(jax.devices())
+    n_lam = (n // n_node) if n_lam is None else n_lam
+    assert n_node * n_lam <= n, (n_node, n_lam, n)
+    return jax.make_mesh((n_node, n_lam), ("node", "lam"))
+
+
 def make_host_mesh(model_axis: int = 1):
     """Small mesh over whatever devices exist (tests / CPU examples)."""
     n = len(jax.devices())

@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import metrics
+from repro.core import metrics, tuning
 from repro.core.admm import ADMMConfig, decsvm_fit
 from repro.models import model
 from repro.models.config import ModelConfig
@@ -69,10 +69,16 @@ def extract_features(params, cfg: ModelConfig, tokens: Array,
 
 
 def train_decsvm_head(features: np.ndarray, labels: np.ndarray,
-                      W: np.ndarray, acfg: ADMMConfig
-                      ) -> Tuple[Array, Dict]:
+                      W: np.ndarray, acfg: ADMMConfig, *,
+                      tune: bool = False, lams=None, num: int = 12,
+                      criterion: str = "bic", cv_folds: int = 5,
+                      mode: str = "warm") -> Tuple[Array, Dict]:
     """features: (m, n, d); labels: (m, n) in {-1,+1}; W: (m, m) adjacency.
 
+    With ``tune=True`` (or an explicit ``lams`` grid) the l1 level is
+    selected on-device by the lambda-path engine
+    (``tuning.select_lambda_path``) under the modified BIC or k-fold CV —
+    ``acfg.lam`` is then only the fallback for the untuned call.
     Returns (B (m, d+1) per-node heads with intercept, info dict).
     """
     m, n, d = features.shape
@@ -81,8 +87,16 @@ def train_decsvm_head(features: np.ndarray, labels: np.ndarray,
     Xs = (features - mu) / sd
     X = np.concatenate([np.ones((m, n, 1), np.float32),
                         Xs.astype(np.float32)], axis=-1)
-    B = decsvm_fit(jnp.asarray(X), jnp.asarray(labels.astype(np.float32)),
-                   jnp.asarray(W.astype(np.float32)), acfg)
+    yj = jnp.asarray(labels.astype(np.float32))
+    Wj = jnp.asarray(W.astype(np.float32))
+    best_lam = acfg.lam
+    if tune or lams is not None:
+        best_lam, B, _table, _res = tuning.select_lambda_path(
+            jnp.asarray(X), yj, Wj, acfg, lams=lams, num=num, mode=mode,
+            criterion=criterion, cv_folds=cv_folds)
+        B = jnp.asarray(B)
+    else:
+        B = decsvm_fit(jnp.asarray(X), yj, Wj, acfg)
     Bn = np.asarray(B)
     margins = np.einsum("mnp,mp->mn", X, Bn)
     acc = float(np.mean(np.sign(margins) == labels))
@@ -91,5 +105,7 @@ def train_decsvm_head(features: np.ndarray, labels: np.ndarray,
         "consensus_gap": metrics.consensus_gap(Bn),
         "mean_support": metrics.mean_support_size(Bn, tol=1e-6),
         "normalizer": (np.asarray(mu)[0, 0], np.asarray(sd)[0, 0]),
+        "lam": float(best_lam),
+        "tuned": bool(tune or lams is not None),
     }
     return B, info

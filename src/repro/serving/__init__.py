@@ -1,3 +1,5 @@
 from repro.serving.engine import Request, ServeEngine
+from repro.serving.fit import DecsvmFitServer, FitRequest, FitResult
 
-__all__ = ["Request", "ServeEngine"]
+__all__ = ["Request", "ServeEngine", "DecsvmFitServer", "FitRequest",
+           "FitResult"]

@@ -1,0 +1,123 @@
+"""Fit-serving endpoint: tuned deCSVM fits as a request/response service.
+
+The token engine (``repro.serving.engine``) serves *inference* for the
+language models; this module is the corresponding surface for the paper's
+technique itself — a queue of fit requests (features + labels + network
+adjacency), each answered with a lambda-tuned, optionally folded-concave
+(LLA) deCSVM head.  Tuning always rides the on-device lambda-path engine
+(``tuning.select_lambda_path``): one compiled program per (shape, config)
+traverses the grid, scores it (modified BIC or k-fold CV), and returns the
+selected fit — the ROADMAP item "wire select_lambda_path into the
+fit-serving endpoint".
+
+Programs are cached by (shapes, config) key, so a stream of same-shaped
+requests compiles once and then runs at steady-state path-engine speed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import metrics, tuning
+from repro.core.admm import ADMMConfig, hard_threshold_final
+
+
+@dataclasses.dataclass
+class FitRequest:
+    """One decentralized fit job.
+
+    X: (m, n, p) node-partitioned design (include the intercept column);
+    y: (m, n) labels in {-1, +1}; W: (m, m) adjacency.
+    lams: explicit lambda grid, or None to build ``lambda_grid(num)``.
+    criterion: "bic" | "cv"; penalty: None (plain l1) or one of
+    ``repro.core.penalties.PENALTIES`` for a one-step-LLA stage-2 re-fit.
+    """
+    rid: int
+    X: np.ndarray
+    y: np.ndarray
+    W: np.ndarray
+    cfg: ADMMConfig = ADMMConfig(lam=0.0)
+    lams: Optional[Sequence[float]] = None
+    num: int = 12
+    mode: str = "warm"
+    criterion: str = "bic"
+    cv_folds: int = 5
+    penalty: Optional[str] = None
+    threshold: bool = False          # Theorem-4 hard thresholding of B
+
+
+@dataclasses.dataclass
+class FitResult:
+    rid: int
+    best_lam: float
+    B: np.ndarray                    # (m, p) per-node estimates
+    beta: np.ndarray                 # (p,) network-average estimate
+    table: List[Tuple[float, float, float]]   # (lambda, criterion, supp)
+    criterion: str
+    lam_weights: Optional[np.ndarray]         # LLA stage-2 weights, if any
+    train_accuracy: float
+    consensus_gap: float
+    wall_s: float
+
+
+class DecsvmFitServer:
+    """Synchronous fit server: submit ``FitRequest``s, ``run()`` the queue.
+
+    Mirrors the ``ServeEngine`` submit/run surface so schedulers can treat
+    fit traffic and token traffic uniformly.  Every request resolves to a
+    tuned fit via the on-device path engine; identical (shape, cfg, grid)
+    requests reuse the cached compiled program.
+    """
+
+    def __init__(self) -> None:
+        self.queue: deque = deque()
+        self.completed: Dict[int, FitResult] = {}
+
+    def submit(self, req: FitRequest) -> None:
+        self.queue.append(req)
+
+    def run(self) -> Dict[int, FitResult]:
+        while self.queue:
+            req = self.queue.popleft()
+            self.completed[req.rid] = self._fit(req)
+        return self.completed
+
+    def _fit(self, req: FitRequest) -> FitResult:
+        t0 = time.perf_counter()
+        X = np.asarray(req.X, np.float32)
+        y = np.asarray(req.y, np.float32)
+        W = np.asarray(req.W, np.float32)
+        best_lam, best_B, table, _res = tuning.select_lambda_path(
+            X, y, W, req.cfg, lams=req.lams, num=req.num, mode=req.mode,
+            criterion=req.criterion, cv_folds=req.cv_folds)
+        lam_weights = None
+        if req.penalty is not None:
+            # One-step LLA stage 2: best_B from the path engine *is* the
+            # stage-1 pilot at best_lam, so only the weighted re-fit runs.
+            from repro.core import penalties  # local import: keep serving light
+            from repro.core.admm import decsvm_fit
+            import dataclasses as dc
+            cfg2 = dc.replace(req.cfg, lam=best_lam)
+            pilot = jnp.mean(jnp.asarray(best_B), axis=0)
+            w = penalties.PENALTIES[req.penalty](pilot, best_lam)
+            B2 = decsvm_fit(jnp.asarray(X), jnp.asarray(y), jnp.asarray(W),
+                            cfg2, lam_weights=w)
+            best_B = np.asarray(B2)
+            lam_weights = np.asarray(w)
+        if req.threshold:
+            best_B = np.asarray(hard_threshold_final(
+                jnp.asarray(best_B), best_lam))
+        margins = np.einsum("mnp,mp->mn", X, best_B)
+        acc = float(np.mean(np.sign(margins) == y))
+        return FitResult(
+            rid=req.rid, best_lam=best_lam, B=best_B,
+            beta=best_B.mean(axis=0), table=table,
+            criterion=req.criterion, lam_weights=lam_weights,
+            train_accuracy=acc,
+            consensus_gap=metrics.consensus_gap(best_B),
+            wall_s=time.perf_counter() - t0)

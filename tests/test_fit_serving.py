@@ -1,0 +1,74 @@
+"""Fit-serving endpoint + tuned decsvm_head: the ROADMAP item wiring
+``select_lambda_path`` into the fit-serving surface."""
+import numpy as np
+import pytest
+
+from repro.core import ADMMConfig, SimConfig, generate, tuning
+from repro.core.graph import erdos_renyi
+from repro.serving import DecsvmFitServer, FitRequest
+
+
+@pytest.fixture(scope="module")
+def sim():
+    cfg = SimConfig(p=24, s=4, m=4, n=80, rho=0.5, mu=0.5)
+    X, y, bstar = generate(cfg, seed=5)
+    W = erdos_renyi(cfg.m, 0.7, seed=5)
+    return cfg, X, y, W
+
+
+def test_fit_server_completes_tuned_requests(sim):
+    cfg, X, y, W = sim
+    lams = tuning.lambda_grid(X, y, num=4)
+    acfg = ADMMConfig(lam=0.0, max_iter=120)
+    srv = DecsvmFitServer()
+    srv.submit(FitRequest(rid=0, X=X, y=y, W=W, cfg=acfg, lams=lams,
+                          mode="batched"))
+    srv.submit(FitRequest(rid=1, X=X, y=y, W=W, cfg=acfg, lams=lams,
+                          mode="batched", criterion="cv", cv_folds=3))
+    done = srv.run()
+    assert sorted(done) == [0, 1]
+    for res in done.values():
+        assert res.B.shape == (cfg.m, cfg.p + 1)
+        assert res.beta.shape == (cfg.p + 1,)
+        assert len(res.table) == len(lams)
+        assert np.isfinite(res.B).all()
+        assert res.train_accuracy > 0.7
+        assert res.consensus_gap < 1e-2
+    # BIC request reproduces the library-surface selection exactly
+    best_lam, best_B, _, _ = tuning.select_lambda_path(
+        X, y, W, acfg, lams=lams, mode="batched")
+    assert done[0].best_lam == pytest.approx(best_lam)
+    np.testing.assert_allclose(done[0].B, best_B, atol=1e-6)
+
+
+def test_fit_server_lla_and_threshold(sim):
+    cfg, X, y, W = sim
+    lams = tuning.lambda_grid(X, y, num=4)
+    acfg = ADMMConfig(lam=0.0, max_iter=120)
+    srv = DecsvmFitServer()
+    srv.submit(FitRequest(rid=7, X=X, y=y, W=W, cfg=acfg, lams=lams,
+                          mode="batched", penalty="scad", threshold=True))
+    res = srv.run()[7]
+    assert res.lam_weights is not None
+    assert res.lam_weights.shape == (cfg.p + 1,)
+    # Theorem-4 hard threshold: no surviving coordinate below best_lam
+    nz = res.B[np.abs(res.B) > 0]
+    assert nz.size == 0 or np.min(np.abs(nz)) > res.best_lam
+
+
+def test_decsvm_head_tuned_fit():
+    from repro.optim.decsvm_head import train_decsvm_head
+    rng = np.random.default_rng(0)
+    m, n, d = 4, 60, 16
+    beta = np.zeros(d)
+    beta[:3] = [1.5, -2.0, 1.0]
+    feats = rng.standard_normal((m, n, d)).astype(np.float32)
+    labels = np.sign(feats @ beta + 0.1 * rng.standard_normal((m, n)))
+    W = erdos_renyi(m, 0.7, seed=0)
+    acfg = ADMMConfig(lam=0.05, max_iter=120)
+    B, info = train_decsvm_head(feats, labels, W, acfg, tune=True, num=4,
+                                mode="batched")
+    assert info["tuned"] and info["lam"] > 0
+    assert info["train_accuracy"] > 0.8
+    B0, info0 = train_decsvm_head(feats, labels, W, acfg)
+    assert not info0["tuned"] and info0["lam"] == acfg.lam

@@ -100,6 +100,56 @@ def test_sharded_path_matches_batched(sim):
     np.testing.assert_allclose(shd, bat, atol=1e-5)
 
 
+def test_cv_selection_alongside_bic(sim):
+    """criterion="cv" scores the path with fused k-fold CV; both criteria
+    run in one compiled program and pick a non-degenerate lambda."""
+    cfg, X, y, W, lams = sim
+    acfg = ADMMConfig(lam=0.0, max_iter=MAX_ITER)
+    res_cv = decsvm_path_select(X, y, W, jnp.asarray(lams), acfg,
+                                mode="batched", criterion="cv", cv_folds=3)
+    res_bic = decsvm_path_select(X, y, W, jnp.asarray(lams), acfg,
+                                 mode="batched", criterion="bic")
+    assert res_cv.criteria.shape == (len(lams),)
+    assert np.all(np.isfinite(np.asarray(res_cv.criteria)))
+    # CV scores are held-out hinge: different scale from BIC
+    assert not np.allclose(np.asarray(res_cv.criteria),
+                           np.asarray(res_bic.criteria))
+    # the full-data path is criterion-independent
+    np.testing.assert_allclose(np.asarray(res_cv.path),
+                               np.asarray(res_bic.path), atol=1e-6)
+    # CV must not pick the all-zero (lambda_max) model
+    assert float(res_cv.best_lam) < float(lams[0])
+
+
+def test_mesh_engine_via_select_lambda_path(sim):
+    """engine="mesh" routes selection through the 2-D (node, lam) mesh and
+    agrees with the dense engine on path and criteria."""
+    cfg, X, y, W, lams = sim
+    acfg = ADMMConfig(lam=0.0, max_iter=MAX_ITER)
+    best_d, B_d, table_d, res_d = tuning.select_lambda_path(
+        X, y, W, acfg, lams=lams, mode="batched")
+    best_m, B_m, table_m, res_m = tuning.select_lambda_path(
+        X, y, W, acfg, lams=lams, mode="batched", engine="mesh")
+    assert best_m == pytest.approx(best_d, rel=1e-5)
+    np.testing.assert_allclose(B_m, B_d, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(res_m.criteria),
+                               np.asarray(res_d.criteria), atol=1e-4)
+
+
+def test_lla_stage2_runs_sharded(sim):
+    """The sharded engines accept lam_weights, so LLA stage 2 rides them
+    (PR 3's per-coordinate fix reached dense+Pallas but not sharded)."""
+    cfg, X, y, W, lams = sim
+    acfg = ADMMConfig(lam=0.06, max_iter=MAX_ITER)
+    B_dense, w_dense = decsvm_fit_lla(X, y, W, acfg, penalty="scad")
+    B_shard, w_shard = decsvm_fit_lla(X, y, W, acfg, penalty="scad",
+                                      engine="sharded")
+    np.testing.assert_allclose(np.asarray(w_shard), np.asarray(w_dense),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(B_shard), np.asarray(B_dense),
+                               atol=1e-5)
+
+
 def test_lla_stage1_pilot_from_path(sim):
     cfg, X, y, W, lams = sim
     acfg = ADMMConfig(lam=0.0, max_iter=MAX_ITER)

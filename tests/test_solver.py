@@ -1,0 +1,222 @@
+"""Unified solver core (``repro.core.solver``): every driver in the repo
+must produce the identical trajectory from the single Algorithm-1 step.
+
+These parity tests replace the old per-pair agreement tests: since dense,
+tolerance, uneven-n, path, sharded and Pallas engines are all thin drivers
+over ``solver.make_step``, one shared fixture checks them all against the
+dense reference (and each other) to <= 1e-5.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import (ADMMConfig, SimConfig, decsvm_fit, generate, solver,
+                        tuning)
+from repro.core import decentral
+from repro.core.admm_adaptive import decsvm_fit_tol, decsvm_fit_uneven
+from repro.core.graph import ring
+from repro.core.path import decsvm_path_batched, decsvm_path_warm
+
+MAX_ITER = 60
+LAM = 0.05
+ATOL = 1e-5
+
+
+@pytest.fixture(scope="module")
+def fixture():
+    cfg = SimConfig(p=20, s=4, m=4, n=60)
+    X, y, _ = generate(cfg, seed=1)
+    W = ring(cfg.m)            # ring graph: every schedule can run on it
+    return (cfg, jnp.asarray(X), jnp.asarray(y),
+            jnp.asarray(W, jnp.float32), np.asarray(W))
+
+
+@pytest.fixture(scope="module")
+def dense_B(fixture):
+    cfg, X, y, Wj, _ = fixture
+    acfg = ADMMConfig(lam=LAM, max_iter=MAX_ITER)
+    return np.asarray(decsvm_fit(X, y, Wj, acfg))
+
+
+def _drivers(fixture):
+    """Name -> final-B callable for every driver of the unified step."""
+    cfg, X, y, Wj, Wn = fixture
+    acfg = ADMMConfig(lam=LAM, max_iter=MAX_ITER)
+    pcfg = ADMMConfig(lam=0.0, max_iter=MAX_ITER)
+    lams1 = jnp.asarray([LAM], jnp.float32)
+    full_mask = jnp.ones(y.shape, jnp.float32)
+    return {
+        "dense": lambda: decsvm_fit(X, y, Wj, acfg),
+        "pallas": lambda: decsvm_fit(
+            X, y, Wj, ADMMConfig(lam=LAM, max_iter=MAX_ITER,
+                                 use_pallas=True)),
+        # tol = -1 forces the while-loop driver through all MAX_ITER rounds
+        "tol": lambda: decsvm_fit_tol(X, y, Wj, acfg, tol=-1.0)[0],
+        "uneven": lambda: decsvm_fit_uneven(X, y, full_mask, Wj, acfg),
+        "path-batched": lambda: decsvm_path_batched(X, y, Wj, lams1,
+                                                    pcfg)[0],
+        "path-warm": lambda: decsvm_path_warm(X, y, Wj, lams1, pcfg,
+                                              tol=-1.0,
+                                              stop_rule="progress")[0][0],
+        "sharded-gather": lambda: decentral.decsvm_fit_sharded(
+            X, y, Wn, acfg, schedule="gather"),
+        "sharded-ring": lambda: decentral.decsvm_fit_sharded(
+            X, y, Wn, acfg, schedule="ring"),
+        "mesh-2d": lambda: decentral.decsvm_path_mesh(
+            X, y, Wn, [LAM], pcfg, mode="batched").path[0],
+    }
+
+
+@pytest.mark.parametrize("name", ["dense", "pallas", "tol", "uneven",
+                                  "path-batched", "path-warm",
+                                  "sharded-gather", "sharded-ring",
+                                  "mesh-2d"])
+def test_every_driver_matches_dense_reference(fixture, dense_B, name):
+    got = np.asarray(_drivers(fixture)[name]())
+    np.testing.assert_allclose(got, dense_B, atol=ATOL)
+
+
+def test_nonuniform_penalty_parity_dense_vs_sharded_vs_path(fixture):
+    """lam_weights (LLA stage 2) rides every engine identically — the
+    feature gap that let PR 3's per-coordinate fix miss the sharded path."""
+    cfg, X, y, Wj, Wn = fixture
+    w = jnp.asarray(np.random.default_rng(0).uniform(0.2, 1.0, cfg.p + 1),
+                    jnp.float32)
+    acfg = ADMMConfig(lam=LAM, max_iter=MAX_ITER)
+    pcfg = ADMMConfig(lam=0.0, max_iter=MAX_ITER)
+    dense = np.asarray(decsvm_fit(X, y, Wj, acfg, lam_weights=w))
+    sharded = np.asarray(decentral.decsvm_fit_sharded(
+        X, y, Wn, acfg, lam_weights=w))
+    ring_s = np.asarray(decentral.decsvm_fit_sharded(
+        X, y, Wn, acfg, schedule="ring", lam_weights=w))
+    path = np.asarray(decsvm_path_batched(
+        X, y, Wj, jnp.asarray([LAM]), pcfg, lam_weights=w))[0]
+    spath = np.asarray(decentral.decsvm_path_sharded(
+        X, y, Wn, [LAM], pcfg, lam_weights=w))[0]
+    mesh = np.asarray(decentral.decsvm_path_mesh(
+        X, y, Wn, [LAM], pcfg, lam_weights=w).path[0])
+    for name, got in [("sharded", sharded), ("ring", ring_s),
+                      ("path", path), ("sharded-path", spath),
+                      ("mesh", mesh)]:
+        np.testing.assert_allclose(got, dense, atol=ATOL, err_msg=name)
+    # the weights actually bite: non-uniform result differs from uniform
+    uniform = np.asarray(decsvm_fit(X, y, Wj, acfg))
+    assert np.max(np.abs(dense - uniform)) > 1e-4
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 100), lam=st.floats(0.02, 0.3))
+def test_property_dense_path_uneven_agree(seed, lam):
+    """Property check: for random data and lambda, three independent
+    drivers of the single step coincide."""
+    cfg = SimConfig(p=12, s=3, m=4, n=30)
+    X, y, _ = generate(cfg, seed=seed)
+    W = ring(cfg.m)
+    Xj, yj, Wj = jnp.asarray(X), jnp.asarray(y), jnp.asarray(W, jnp.float32)
+    acfg = ADMMConfig(lam=float(lam), max_iter=30)
+    dense = np.asarray(decsvm_fit(Xj, yj, Wj, acfg))
+    path = np.asarray(decsvm_path_batched(
+        Xj, yj, Wj, jnp.asarray([float(lam)]),
+        ADMMConfig(lam=0.0, max_iter=30)))[0]
+    uneven = np.asarray(decsvm_fit_uneven(
+        Xj, yj, jnp.ones(yj.shape, jnp.float32), Wj, acfg))
+    np.testing.assert_allclose(path, dense, atol=ATOL)
+    np.testing.assert_allclose(uneven, dense, atol=ATOL)
+
+
+def test_pallas_config_with_mask_uses_masked_gradient(fixture):
+    """The fused kernel has no sample-mask operand: a masked fit under a
+    use_pallas config must fall back to the masked jnp backend, not
+    silently count held-out rows as real samples."""
+    cfg, X, y, Wj, _ = fixture
+    mask = np.ones(y.shape, np.float32)
+    mask[::2, 30:] = 0.0           # half the rows on half the nodes
+    acfg = ADMMConfig(lam=LAM, max_iter=MAX_ITER)
+    pcfg = ADMMConfig(lam=LAM, max_iter=MAX_ITER, use_pallas=True)
+    ref = np.asarray(decsvm_fit_uneven(X, y, jnp.asarray(mask), Wj, acfg))
+    got = np.asarray(decsvm_fit_uneven(X, y, jnp.asarray(mask), Wj, pcfg))
+    np.testing.assert_allclose(got, ref, atol=ATOL)
+    # and an unmasked fit genuinely differs, so the mask was honoured
+    unmasked = np.asarray(decsvm_fit(X, y, Wj, acfg))
+    assert np.max(np.abs(ref - unmasked)) > 1e-3
+
+
+def test_sharded_program_cache_hits(fixture):
+    """Repeat driver calls reuse the built shard_map program (jit caches
+    by function identity, so rebuilding per call would recompile)."""
+    cfg, X, y, _, Wn = fixture
+    acfg = ADMMConfig(lam=LAM, max_iter=5)
+    decentral.decsvm_fit_sharded(X, y, Wn, acfg)
+    before = decentral.build_sharded_admm.cache_info().hits
+    decentral.decsvm_fit_sharded(X, y, Wn, acfg)
+    assert decentral.build_sharded_admm.cache_info().hits == before + 1
+    decentral.decsvm_path_mesh(X, y, Wn, [LAM], acfg)
+    before = decentral.build_mesh_path.cache_info().hits
+    decentral.decsvm_path_mesh(X, y, Wn, [LAM], acfg)
+    assert decentral.build_mesh_path.cache_info().hits == before + 1
+
+
+def test_lla_sharded_engine_tunes_on_mesh(fixture):
+    """decsvm_fit_lla(engine="sharded", lams=...) runs stage 1 on the
+    mesh path engine and agrees with the dense stage-1/stage-2 pipeline."""
+    from repro.core.penalties import decsvm_fit_lla
+    cfg, X, y, Wj, Wn = fixture
+    acfg = ADMMConfig(lam=0.0, max_iter=MAX_ITER)
+    lams = tuning.lambda_grid(np.asarray(X), np.asarray(y), num=3)
+    B_d, w_d = decsvm_fit_lla(X, y, Wj, acfg, penalty="scad", lams=lams,
+                              path_mode="batched")
+    B_s, w_s = decsvm_fit_lla(X, y, Wj, acfg, penalty="scad", lams=lams,
+                              path_mode="batched", engine="sharded")
+    np.testing.assert_allclose(np.asarray(w_s), np.asarray(w_d), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(B_s), np.asarray(B_d), atol=ATOL)
+
+
+def test_kkt_residual_zero_at_optimum(fixture):
+    cfg, X, y, Wj, _ = fixture
+    acfg = ADMMConfig(lam=LAM, max_iter=3000)
+    B, t = decsvm_fit_tol(X, y, Wj, acfg, tol=1e-8)
+    prob = solver.make_problem(X, y, Wj, acfg)
+    res = float(solver.kkt_residual(prob, acfg, B, acfg.lam))
+    assert res < 1e-4, res
+    # far from the optimum the residual is large
+    res0 = float(solver.kkt_residual(prob, acfg, jnp.zeros_like(B), acfg.lam))
+    assert res0 > 1e-2, res0
+
+
+def test_kkt_stop_rule_tracks_converged_reference(fixture):
+    """The KKT rule stops at actual optimality: at equal tolerance its
+    warm path is closer to the *converged* cold reference than the legacy
+    iterate-progress rule (the ROADMAP warm-path-deviates failure)."""
+    cfg, X, y, Wj, _ = fixture
+    lams = tuning.lambda_grid(np.asarray(X), np.asarray(y), num=5)
+    pcfg = ADMMConfig(lam=0.0, max_iter=3000)
+    ref = np.asarray(decsvm_path_batched(X, y, Wj, jnp.asarray(lams), pcfg))
+    devs = {}
+    for rule in ("kkt", "progress"):
+        pw, iters = decsvm_path_warm(X, y, Wj, jnp.asarray(lams), pcfg,
+                                     tol=1e-4, stop_rule=rule)
+        iters = np.asarray(iters)
+        assert np.all(iters < 3000), (rule, iters)   # both stop early
+        devs[rule] = float(np.max(np.abs(np.asarray(pw) - ref)))
+    assert devs["kkt"] <= devs["progress"], devs
+    assert devs["kkt"] < 5e-3, devs
+
+
+def test_tol_driver_kkt_rule(fixture):
+    cfg, X, y, Wj, _ = fixture
+    acfg = ADMMConfig(lam=LAM, max_iter=3000)
+    B_kkt, t_kkt = decsvm_fit_tol(X, y, Wj, acfg, tol=1e-5, stop_rule="kkt")
+    B_ref, _ = decsvm_fit_tol(X, y, Wj, acfg, tol=1e-8)
+    assert int(t_kkt) < 3000
+    assert np.max(np.abs(np.asarray(B_kkt) - np.asarray(B_ref))) < 1e-3
+
+
+def test_kfold_masks_partition():
+    masks = tuning.kfold_masks(3, 20, 4, seed=0)
+    assert masks.shape == (4, 3, 20)
+    # validation sets partition each node's samples exactly once
+    val = 1.0 - masks
+    np.testing.assert_array_equal(val.sum(axis=0), np.ones((3, 20)))
+    # every fold keeps a majority of each node's rows for training
+    assert masks.sum(axis=2).min() >= 10
