@@ -54,7 +54,7 @@ def main():
         schedule=schedule))
 
     margins = np.einsum("mnp,mp->mn", X, B)
-    acc = float(np.mean(np.sign(margins) == yl))
+    acc = metrics.margin_accuracy(margins, yl)
     print(f"train accuracy      : {acc:.3f}")
     print(f"consensus gap       : {metrics.consensus_gap(B):.2e}")
     print(f"mean support size   : {metrics.mean_support_size(B, 1e-4):.1f} "

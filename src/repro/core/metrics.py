@@ -37,11 +37,23 @@ def consensus_gap(B: np.ndarray) -> float:
     return float(np.max(np.linalg.norm(B - mean, axis=1)))
 
 
-def accuracy(beta: np.ndarray, X: np.ndarray, y: np.ndarray) -> float:
-    """Classification accuracy of sign(x' beta)."""
-    pred = np.sign(np.asarray(X) @ np.asarray(beta))
-    pred = np.where(pred == 0, 1.0, pred)
+def margin_accuracy(margins: np.ndarray, y: np.ndarray) -> float:
+    """Accuracy of margin-based predictions with the tie rule
+    ``margin >= 0 -> +1``.
+
+    ``np.sign(margins) == y`` scores a zero margin as a third class —
+    never equal to +/-1 labels — which under-reports accuracy for
+    thresholded/degenerate fits (e.g. an all-zero B after Theorem-4
+    thresholding would score 0.0 instead of the positive-class rate).
+    Every accuracy reported by this repo decides ties the same way.
+    """
+    pred = np.where(np.asarray(margins) >= 0, 1.0, -1.0)
     return float(np.mean(pred == np.asarray(y)))
+
+
+def accuracy(beta: np.ndarray, X: np.ndarray, y: np.ndarray) -> float:
+    """Classification accuracy of sign(x' beta), ties to +1."""
+    return margin_accuracy(np.asarray(X) @ np.asarray(beta), y)
 
 
 def mean_support_size(B: np.ndarray, tol: float = 1e-8) -> float:

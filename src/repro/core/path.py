@@ -29,6 +29,16 @@ cross-validation scoring into the same program and returns
 ``(best_lam, best_B, path, criteria)`` as device arrays.  The sharded
 counterparts (node-sharded and true 2-D node x lambda meshes) live in
 ``repro.core.decentral``.
+
+**Problem batching** (the serving axis, orthogonal to the node x lambda
+mesh): ``decsvm_path_select_many`` stacks same-shape ``(X, y, W)``
+problems on a leading batch axis and runs every fit, its BIC/CV scoring,
+and the per-problem argmin in ONE compiled program — per-problem
+``rho``/``omega`` fall out of ``vmap`` over ``solver.make_problem``.
+``decsvm_fit_many`` is the matching single-fit fan-out with *traced*
+per-problem ``(lam, lam_weights)`` (so LLA stage-2 re-fits across a
+bucket of tuned problems never recompile).  ``serving.fit`` buckets its
+request queue onto these entry points.
 """
 from __future__ import annotations
 
@@ -74,17 +84,22 @@ def decsvm_path_batched(X: Array, y: Array, W: Array, lams: Array,
     return jax.vmap(fit_one)(lams)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "stop_rule"))
+@functools.partial(jax.jit, static_argnames=("cfg", "stop_rule",
+                                             "check_every"))
 def decsvm_path_warm(X: Array, y: Array, W: Array, lams: Array,
                      cfg: ADMMConfig, tol: float = 1e-6,
                      lam_weights: Optional[Array] = None,
-                     stop_rule: str = "kkt"):
+                     stop_rule: str = "kkt",
+                     check_every: int = 4):
     """Sequential continuation over *decreasing* lambda with warm starts.
 
     Each grid point seeds B from the previous solution (duals restart at
     zero) and early-stops once the stop statistic <= tol: the
     KKT/duality-gap residual by default (``stop_rule="kkt"``), or the
     legacy iterate-progress rule max|B_t - B_{t-1}| (``"progress"``).
+    ``check_every=k`` evaluates the statistic every k-th round only
+    (the KKT rule costs a network gradient per evaluation; the loop
+    still stops only on a measured residual <= tol).
     Returns (path (L, m, p), iters (L,)).  cfg.lam is ignored.
     """
     if stop_rule not in ("kkt", "progress"):
@@ -99,7 +114,8 @@ def decsvm_path_warm(X: Array, y: Array, W: Array, lams: Array,
         state = solver.init_state(prob, B0=B_carry)
         final = solver.run_tol(step, prob, lam, lam_weights,
                                max_iter=cfg.max_iter, tol=tol, state=state,
-                               residual_fn=residual_fn)
+                               residual_fn=residual_fn,
+                               check_every=check_every)
         return final.B, (final.B, final.t)
 
     m, _, p = X.shape
@@ -145,15 +161,17 @@ def decsvm_path_cv(X: Array, y: Array, W: Array, lams: Array,
     return jnp.mean(jax.vmap(fold_scores)(masks), axis=0)   # (L,)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "mode", "stop_rule"))
+@functools.partial(jax.jit, static_argnames=("cfg", "mode", "stop_rule",
+                                             "check_every"))
 def _path_select(X, y, W, lams, cfg, mode, tol, lam_weights, stop_rule,
-                 cv_masks):
+                 cv_masks, check_every=4):
     if mode == "batched":
         path = decsvm_path_batched(X, y, W, lams, cfg, lam_weights)
         iters = jnp.full((path.shape[0],), cfg.max_iter, jnp.int32)
     else:
         path, iters = decsvm_path_warm(X, y, W, lams, cfg, tol, lam_weights,
-                                       stop_rule=stop_rule)
+                                       stop_rule=stop_rule,
+                                       check_every=check_every)
     if cv_masks is None:
         crits = score_path(X, y, path)
     else:
@@ -163,13 +181,31 @@ def _path_select(X, y, W, lams, cfg, mode, tol, lam_weights, stop_rule,
     return PathResult(lams[i], path[i], lams, path, crits, iters)
 
 
+def _validate_select(mode, stop_rule, criterion):
+    if mode not in ("warm", "batched"):
+        raise ValueError(f"mode {mode!r} not in ('warm', 'batched')")
+    if stop_rule not in ("kkt", "progress"):
+        raise ValueError(f"stop_rule {stop_rule!r} not in ('kkt', 'progress')")
+    if criterion not in ("bic", "cv"):
+        raise ValueError(f"criterion {criterion!r} not in ('bic', 'cv')")
+
+
+def _cv_masks_for(shape_m, shape_n, criterion, cv_folds, cv_seed, dtype):
+    if criterion != "cv":
+        return None
+    from repro.core.tuning import kfold_masks  # local import: avoid cycle
+    return jnp.asarray(kfold_masks(shape_m, shape_n, cv_folds, seed=cv_seed),
+                       dtype)
+
+
 def decsvm_path_select(X: Array, y: Array, W: Array,
                        lams: Array | Sequence[float], cfg: ADMMConfig,
                        mode: str = "warm", tol: float = 1e-6,
                        lam_weights: Optional[Array] = None,
                        stop_rule: str = "kkt",
                        criterion: str = "bic",
-                       cv_folds: int = 5, cv_seed: int = 0) -> PathResult:
+                       cv_folds: int = 5, cv_seed: int = 0,
+                       check_every: int = 4) -> PathResult:
     """Traverse the grid and pick lambda, in one compiled program.
 
     mode: "warm" (continuation + early stop, fastest) or "batched"
@@ -179,17 +215,85 @@ def decsvm_path_select(X: Array, y: Array, W: Array,
     and the argmin stay on device; nothing forces a host sync until the
     caller reads the result.
     """
-    if mode not in ("warm", "batched"):
-        raise ValueError(f"mode {mode!r} not in ('warm', 'batched')")
-    if stop_rule not in ("kkt", "progress"):
-        raise ValueError(f"stop_rule {stop_rule!r} not in ('kkt', 'progress')")
-    if criterion not in ("bic", "cv"):
-        raise ValueError(f"criterion {criterion!r} not in ('bic', 'cv')")
-    cv_masks = None
-    if criterion == "cv":
-        from repro.core.tuning import kfold_masks  # local import: avoid cycle
-        m, n = X.shape[0], X.shape[1]
-        cv_masks = jnp.asarray(kfold_masks(m, n, cv_folds, seed=cv_seed),
-                               X.dtype)
+    _validate_select(mode, stop_rule, criterion)
+    cv_masks = _cv_masks_for(X.shape[0], X.shape[1], criterion, cv_folds,
+                             cv_seed, X.dtype)
     return _path_select(X, y, W, jnp.asarray(lams), cfg, mode, tol,
-                        lam_weights, stop_rule, cv_masks)
+                        lam_weights, stop_rule, cv_masks, check_every)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def decsvm_fit_many(Xs: Array, ys: Array, Ws: Array, lams: Array,
+                    cfg: ADMMConfig,
+                    lam_weights: Optional[Array] = None) -> Array:
+    """Fit a stack of same-shape problems, each at its own *traced* lambda.
+
+    Xs: (B, m, n, p), ys: (B, m, n), Ws: (B, m, m), lams: (B,) per-problem
+    l1 levels, lam_weights: optional (B, p) per-problem per-coordinate
+    multipliers.  Per-problem rho/omega come from ``vmap`` over
+    ``solver.make_problem``.  Because lambda is traced, a bucket of LLA
+    stage-2 re-fits (every problem at its own selected lambda and weights)
+    runs through ONE compiled program — the per-problem
+    ``dataclasses.replace(cfg, lam=...)`` recompile of the serial path
+    disappears.  Returns B: (B, m, p); cfg.lam is ignored.
+    """
+    lams = jnp.asarray(lams, Xs.dtype)
+
+    def one(X, y, W, lam, w):
+        prob = solver.make_problem(X, y, W, cfg)
+        step = solver.make_step(cfg, lambda B: W @ B)
+        return solver.run_fixed(step, prob, lam, w,
+                                num_iters=cfg.max_iter).B
+
+    if lam_weights is None:
+        return jax.vmap(lambda X, y, W, lam: one(X, y, W, lam, None))(
+            Xs, ys, Ws, lams)
+    return jax.vmap(one)(Xs, ys, Ws, lams, jnp.asarray(lam_weights, Xs.dtype))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "mode", "stop_rule",
+                                             "check_every"))
+def _path_select_many(Xs, ys, Ws, lams, cfg, mode, tol, lam_weights,
+                      stop_rule, cv_masks, check_every):
+    def one(X, y, W):
+        return _path_select(X, y, W, lams, cfg, mode, tol, lam_weights,
+                            stop_rule, cv_masks, check_every)
+
+    return jax.vmap(one)(Xs, ys, Ws)
+
+
+def decsvm_path_select_many(Xs: Array, ys: Array, Ws: Array,
+                            lams: Array | Sequence[float], cfg: ADMMConfig,
+                            mode: str = "warm", tol: float = 1e-6,
+                            lam_weights: Optional[Array] = None,
+                            stop_rule: str = "kkt",
+                            criterion: str = "bic",
+                            cv_folds: int = 5, cv_seed: int = 0,
+                            check_every: int = 4) -> PathResult:
+    """Problem-batched ``decsvm_path_select``: one program, many problems.
+
+    Xs: (B, m, n, p), ys: (B, m, n), Ws: (B, m, m) stack B same-shape
+    problems on a leading batch axis; ``lams`` (L,) is the shared grid for
+    the bucket.  Every per-problem fit (all L grid points, warm or
+    batched), the BIC/CV scoring, and each problem's argmin run inside a
+    single compiled program — ``vmap`` over ``_path_select`` batches the
+    whole pipeline, including per-problem rho/omega from
+    ``solver.make_problem`` and per-problem early stopping in warm mode
+    (vmapped ``while_loop`` freezes converged problems, so results match
+    the per-problem serial traversal exactly).  CV folds reuse one mask
+    set across the bucket (same (m, n, cv_folds, cv_seed) => same masks
+    as the serial path, preserving parity).
+
+    Returns a ``PathResult`` whose fields carry a leading (B,) axis:
+    best_lam (B,), best_B (B, m, p), lams (B, L), path (B, L, m, p),
+    criteria (B, L), iters (B, L).
+    """
+    _validate_select(mode, stop_rule, criterion)
+    Xs = jnp.asarray(Xs)
+    if Xs.ndim != 4:
+        raise ValueError(f"Xs must be (B, m, n, p), got shape {Xs.shape}")
+    cv_masks = _cv_masks_for(Xs.shape[1], Xs.shape[2], criterion, cv_folds,
+                             cv_seed, Xs.dtype)
+    return _path_select_many(Xs, jnp.asarray(ys), jnp.asarray(Ws),
+                             jnp.asarray(lams), cfg, mode, tol, lam_weights,
+                             stop_rule, cv_masks, check_every)

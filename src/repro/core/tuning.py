@@ -38,7 +38,9 @@ the modified BIC above (``criterion="bic"``) and k-fold cross-validated
 held-out hinge loss (``criterion="cv"``, folds from ``kfold_masks``).
 
 ``select_lambda_path`` wraps the on-device engines with this module's
-(best_lam, best_B, table) convention.
+(best_lam, best_B, table) convention; ``select_lambda_path_many`` is the
+problem-batched counterpart (a stack of same-shape problems through ONE
+compiled program — the fit-serving bucket executor).
 """
 from __future__ import annotations
 
@@ -93,6 +95,20 @@ def kfold_masks(m: int, n: int, k: int, seed: int = 0) -> np.ndarray:
     return masks
 
 
+def _lambda_max(X: np.ndarray, y: np.ndarray) -> float:
+    """|X'y/N|_inf — the all-zero (hinge-subgradient) threshold."""
+    X2 = np.asarray(X).reshape(-1, X.shape[-1])
+    y2 = np.asarray(y).reshape(-1)
+    return float(np.max(np.abs(X2.T @ y2)) / len(y2))
+
+
+def _log_grid(lam_max: float, num: int, min_frac: float) -> np.ndarray:
+    """The repo's one grid convention: log-spaced, *decreasing* from
+    lam_max to lam_max * min_frac (the order warm continuation needs)."""
+    return np.logspace(math.log10(lam_max), math.log10(lam_max * min_frac),
+                       num)
+
+
 def lambda_grid(X: np.ndarray, y: np.ndarray, num: int = 12,
                 min_frac: float = 1e-3) -> np.ndarray:
     """Log-spaced grid below lambda_max = |X'y/N|_inf (all-zero threshold).
@@ -100,10 +116,7 @@ def lambda_grid(X: np.ndarray, y: np.ndarray, num: int = 12,
     Returned in *decreasing* order — the traversal order the warm-start
     continuation engine requires.
     """
-    X2 = np.asarray(X).reshape(-1, X.shape[-1])
-    y2 = np.asarray(y).reshape(-1)
-    lam_max = float(np.max(np.abs(X2.T @ y2)) / len(y2))
-    return np.logspace(math.log10(lam_max), math.log10(lam_max * min_frac), num)
+    return _log_grid(_lambda_max(X, y), num, min_frac)
 
 
 def select_lambda(fit_fn: Callable[[float], np.ndarray], X: np.ndarray,
@@ -128,7 +141,8 @@ def select_lambda_path(X, y, W, cfg, lams: Optional[Sequence[float]] = None,
                        lam_weights=None, criterion: str = "bic",
                        cv_folds: int = 5, cv_seed: int = 0,
                        stop_rule: str = "kkt", engine: str = "dense",
-                       mesh=None, schedule: str = "gather"):
+                       mesh=None, schedule: str = "gather",
+                       check_every: int = 4):
     """On-device grid selection via ``repro.core.path`` / ``decentral``.
 
     Builds ``lambda_grid(X, y, num)`` when ``lams`` is omitted, runs the
@@ -139,6 +153,11 @@ def select_lambda_path(X, y, W, cfg, lams: Optional[Sequence[float]] = None,
     size).  The full on-device ``PathResult`` is returned as a fourth
     element.  ``engine="mesh"`` routes the traversal through the 2-D
     (node, lam) device-mesh engine (``decentral.decsvm_path_mesh``).
+
+    ``check_every`` (dense engine, warm mode only): evaluate the stop
+    statistic every k-th round instead of every round.  The mesh engine
+    ignores it — its KKT residual contains mesh collectives that must
+    run on every round, so it always checks per round.
     """
     from repro.core import path as path_mod  # local import: avoid cycle
 
@@ -156,10 +175,62 @@ def select_lambda_path(X, y, W, cfg, lams: Optional[Sequence[float]] = None,
             jnp.asarray(X), jnp.asarray(y), jnp.asarray(W),
             jnp.asarray(lams), cfg, mode=mode, tol=tol,
             lam_weights=lam_weights, stop_rule=stop_rule,
-            criterion=criterion, cv_folds=cv_folds, cv_seed=cv_seed)
+            criterion=criterion, cv_folds=cv_folds, cv_seed=cv_seed,
+            check_every=check_every)
     else:
         raise ValueError(f"engine {engine!r} not in ('dense', 'mesh')")
     table = [(float(l), float(c), metrics.mean_support_size(np.asarray(B)))
              for l, c, B in zip(np.asarray(res.lams), np.asarray(res.criteria),
                                 np.asarray(res.path))]
     return float(res.best_lam), np.asarray(res.best_B), table, res
+
+
+def shared_lambda_grid(Xs: np.ndarray, ys: np.ndarray, num: int = 12,
+                       min_frac: float = 1e-3) -> np.ndarray:
+    """One grid for a stack of problems: lambda_max is the max of the
+    per-problem all-zero thresholds, so the grid's top point (nearly)
+    zeroes every problem in the bucket.  Xs: (B, m, n, p), ys: (B, m, n);
+    decreasing, same convention as ``lambda_grid``.
+    """
+    Xs, ys = np.asarray(Xs), np.asarray(ys)
+    lam_max = max(_lambda_max(Xb, yb) for Xb, yb in zip(Xs, ys))
+    return _log_grid(lam_max, num, min_frac)
+
+
+def select_lambda_path_many(Xs, ys, Ws, cfg,
+                            lams: Optional[Sequence[float]] = None,
+                            num: int = 12, mode: str = "warm",
+                            tol: float = 1e-6, lam_weights=None,
+                            criterion: str = "bic", cv_folds: int = 5,
+                            cv_seed: int = 0, stop_rule: str = "kkt",
+                            check_every: int = 4):
+    """Problem-batched ``select_lambda_path``: B same-shape problems, one
+    compiled program (``repro.core.path.decsvm_path_select_many``).
+
+    Xs: (B, m, n, p), ys: (B, m, n), Ws: (B, m, m).  All problems share
+    one grid — ``lams`` explicitly, or ``shared_lambda_grid(num)`` (the
+    per-problem ``lambda_grid`` would differ per dataset and break the
+    single-program batching; pass explicit grids when parity with a
+    specific serial grid matters).
+
+    Returns (best_lams (B,), best_Bs (B, m, p), tables, res) where
+    ``tables[b]`` is the per-problem (lambda, criterion, support) table
+    and ``res`` the batched on-device ``PathResult``.
+    """
+    from repro.core import path as path_mod  # local import: avoid cycle
+
+    Xs = np.asarray(Xs) if not hasattr(Xs, "dtype") else Xs
+    if lams is None:
+        lams = shared_lambda_grid(np.asarray(Xs), np.asarray(ys), num=num)
+    res = path_mod.decsvm_path_select_many(
+        jnp.asarray(Xs), jnp.asarray(ys), jnp.asarray(Ws), jnp.asarray(lams),
+        cfg, mode=mode, tol=tol, lam_weights=lam_weights,
+        stop_rule=stop_rule, criterion=criterion, cv_folds=cv_folds,
+        cv_seed=cv_seed, check_every=check_every)
+    lams_np = np.asarray(res.lams)          # (B, L)
+    crits_np = np.asarray(res.criteria)     # (B, L)
+    path_np = np.asarray(res.path)          # (B, L, m, p)
+    tables = [[(float(l), float(c), metrics.mean_support_size(B))
+               for l, c, B in zip(lams_np[b], crits_np[b], path_np[b])]
+              for b in range(path_np.shape[0])]
+    return (np.asarray(res.best_lam), np.asarray(res.best_B), tables, res)

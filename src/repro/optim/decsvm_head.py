@@ -99,7 +99,7 @@ def train_decsvm_head(features: np.ndarray, labels: np.ndarray,
         B = decsvm_fit(jnp.asarray(X), yj, Wj, acfg)
     Bn = np.asarray(B)
     margins = np.einsum("mnp,mp->mn", X, Bn)
-    acc = float(np.mean(np.sign(margins) == labels))
+    acc = metrics.margin_accuracy(margins, labels)
     info = {
         "train_accuracy": acc,
         "consensus_gap": metrics.consensus_gap(Bn),

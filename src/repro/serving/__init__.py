@@ -1,5 +1,6 @@
-from repro.serving.engine import Request, ServeEngine
-from repro.serving.fit import DecsvmFitServer, FitRequest, FitResult
+from repro.serving.engine import FifoEngine, Request, ServeEngine
+from repro.serving.fit import (DecsvmFitServer, FitHandle, FitRequest,
+                               FitResult)
 
-__all__ = ["Request", "ServeEngine", "DecsvmFitServer", "FitRequest",
-           "FitResult"]
+__all__ = ["FifoEngine", "Request", "ServeEngine", "DecsvmFitServer",
+           "FitHandle", "FitRequest", "FitResult"]

@@ -34,10 +34,40 @@ class Request:
     done: bool = False
 
 
-class ServeEngine:
+class FifoEngine:
+    """Shared scheduling surface for the serving endpoints.
+
+    The token engine (``ServeEngine``) and the fit server
+    (``repro.serving.fit.DecsvmFitServer``) expose the same verbs, so a
+    scheduler can interleave token traffic and fit traffic uniformly:
+    ``submit`` enqueues a request, ``step()`` resolves one unit of work
+    (one decode step / one request bucket), ``run()`` drains the queue,
+    and ``pending`` / ``utilization`` report load.
+    """
+
+    def __init__(self) -> None:
+        self.queue: deque = deque()
+
+    def submit(self, req) -> None:
+        self.queue.append(req)
+
+    @property
+    def pending(self) -> int:
+        return len(self.queue)
+
+    def step(self) -> None:
+        raise NotImplementedError
+
+    @property
+    def utilization(self) -> float:
+        raise NotImplementedError
+
+
+class ServeEngine(FifoEngine):
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
                  max_len: int = 256, eos_id: Optional[int] = None,
                  block_prefill: bool = False):
+        super().__init__()
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -47,15 +77,11 @@ class ServeEngine:
         self.cache = model.init_cache(cfg, max_batch, max_len)
         self.pos = np.zeros(max_batch, np.int32)
         self.slots: List[Optional[Request]] = [None] * max_batch
-        self.queue: deque = deque()
         self.completed: Dict[int, Request] = {}
         self._step = jax.jit(
             lambda p, c, t, pos: model.decode_step(p, c, t, pos, cfg))
 
     # -- public API ---------------------------------------------------------
-
-    def submit(self, req: Request) -> None:
-        self.queue.append(req)
 
     def run(self, max_steps: int = 10_000) -> Dict[int, Request]:
         steps = 0

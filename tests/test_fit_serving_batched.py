@@ -1,0 +1,304 @@
+"""Batched/async fit serving: parity of the problem-batched path program
+against per-request serial selection, bucket scheduling, and the result
+lifecycle (drain semantics, duplicate rids, zero-margin tie rule).
+
+Fast cases carry the ``serving_smoke`` marker (the CI smoke step runs
+``pytest -m serving_smoke``).
+"""
+import dataclasses as dc
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ADMMConfig, SimConfig, generate, metrics, penalties
+from repro.core import tuning
+from repro.core.admm import decsvm_fit, hard_threshold_final
+from repro.core.graph import erdos_renyi
+from repro.serving import DecsvmFitServer, FitRequest
+
+MAX_ITER = 80
+NPROB = 3
+
+
+@pytest.fixture(scope="module")
+def sims():
+    """Three same-shape problems (different data + adjacency) + shared grid."""
+    cfg = SimConfig(p=16, s=3, m=4, n=48, rho=0.5, mu=0.5)
+    probs = []
+    for s in range(NPROB):
+        X, y, _ = generate(cfg, seed=s)
+        W = erdos_renyi(cfg.m, 0.7, seed=s)
+        probs.append((X, y, W))
+    lams = tuning.lambda_grid(probs[0][0], probs[0][1], num=4)
+    return cfg, probs, lams
+
+
+def _stacked(probs):
+    Xs = np.stack([p[0] for p in probs])
+    ys = np.stack([p[1] for p in probs])
+    Ws = np.stack([p[2] for p in probs]).astype(np.float32)
+    return Xs, ys, Ws
+
+
+@pytest.mark.serving_smoke
+@pytest.mark.parametrize("criterion,mode", [("bic", "warm"),
+                                            ("bic", "batched"),
+                                            ("cv", "warm"),
+                                            ("cv", "batched")])
+def test_select_many_matches_serial(sims, criterion, mode):
+    """One vmapped program over the problem stack reproduces per-request
+    serial ``select_lambda_path`` across criterion x mode to <= 1e-5."""
+    _, probs, lams = sims
+    acfg = ADMMConfig(lam=0.0, max_iter=MAX_ITER)
+    Xs, ys, Ws = _stacked(probs)
+    kw = dict(lams=lams, mode=mode, criterion=criterion, cv_folds=3)
+    bl, bB, tables, res = tuning.select_lambda_path_many(Xs, ys, Ws, acfg,
+                                                         **kw)
+    assert bl.shape == (NPROB,) and bB.shape == (NPROB,) + probs[0][0].shape[::2]
+    for b, (X, y, W) in enumerate(probs):
+        sl, sB, stable, sres = tuning.select_lambda_path(X, y, W, acfg, **kw)
+        assert float(bl[b]) == pytest.approx(sl, abs=1e-7)
+        np.testing.assert_allclose(bB[b], sB, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(res.criteria)[b],
+                                   np.asarray(sres.criteria), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(res.path)[b],
+                                   np.asarray(sres.path), atol=1e-5)
+
+
+@pytest.mark.serving_smoke
+def test_batched_server_lla_threshold_matches_serial(sims):
+    """The server's bucketed LLA stage-2 + Theorem-4 thresholding matches
+    the serial per-request pipeline (path select -> SCAD weights from the
+    pilot -> weighted re-fit -> hard threshold) to <= 1e-5."""
+    _, probs, lams = sims
+    acfg = ADMMConfig(lam=0.0, max_iter=MAX_ITER)
+    srv = DecsvmFitServer()
+    for i, (X, y, W) in enumerate(probs):
+        srv.submit(FitRequest(rid=i, X=X, y=y, W=W, cfg=acfg, lams=lams,
+                              mode="batched", penalty="scad", threshold=True))
+    done = srv.run()
+    assert sorted(done) == list(range(NPROB))
+    # one bucket: all three same-key requests co-batched
+    assert [size for _, size in srv.bucket_log] == [NPROB]
+    for i, (X, y, W) in enumerate(probs):
+        sl, sB, _, _ = tuning.select_lambda_path(X, y, W, acfg, lams=lams,
+                                                 mode="batched")
+        pilot = jnp.mean(jnp.asarray(sB), axis=0)
+        w = penalties.PENALTIES["scad"](pilot, sl)
+        B2 = decsvm_fit(jnp.asarray(np.asarray(X, np.float32)),
+                        jnp.asarray(np.asarray(y, np.float32)),
+                        jnp.asarray(np.asarray(W, np.float32)),
+                        dc.replace(acfg, lam=sl), lam_weights=w)
+        B2 = np.asarray(hard_threshold_final(B2, sl))
+        res = done[i]
+        assert res.best_lam == pytest.approx(sl, abs=1e-7)
+        assert res.batch_size == NPROB
+        np.testing.assert_allclose(res.lam_weights, np.asarray(w), atol=1e-5)
+        np.testing.assert_allclose(res.B, B2, atol=1e-5)
+        # Theorem-4: no surviving coordinate at or below best_lam
+        nz = res.B[np.abs(res.B) > 0]
+        assert nz.size == 0 or np.min(np.abs(nz)) > res.best_lam
+
+
+@pytest.mark.serving_smoke
+def test_mixed_shape_queue_buckets_never_cross_shapes(sims):
+    """An interleaved queue of two shapes resolves as shape-pure buckets,
+    and every request still matches its serial reference."""
+    _, probs, lams = sims
+    acfg = ADMMConfig(lam=0.0, max_iter=MAX_ITER)
+    cfg_b = SimConfig(p=10, s=2, m=3, n=32, rho=0.5, mu=0.5)
+    probs_b = []
+    for s in range(2):
+        Xb, yb, _ = generate(cfg_b, seed=10 + s)
+        Wb = erdos_renyi(cfg_b.m, 0.9, seed=10 + s)
+        probs_b.append((Xb, yb, Wb))
+    lams_b = tuning.lambda_grid(probs_b[0][0], probs_b[0][1], num=3)
+
+    srv = DecsvmFitServer()
+    # interleave: A, B, A, B, A
+    order = [(0, probs[0], lams), (100, probs_b[0], lams_b),
+             (1, probs[1], lams), (101, probs_b[1], lams_b),
+             (2, probs[2], lams)]
+    for rid, (X, y, W), grid in order:
+        srv.submit(FitRequest(rid=rid, X=X, y=y, W=W, cfg=acfg, lams=grid,
+                              mode="batched"))
+    done = srv.run()
+    assert sorted(done) == [0, 1, 2, 100, 101]
+    # two buckets, one per shape — never a mixed one
+    assert sorted(size for _, size in srv.bucket_log) == [2, 3]
+    for key, _ in srv.bucket_log:
+        assert key[0] in (probs[0][0].shape, probs_b[0][0].shape)
+    for rid, (X, y, W), grid in order:
+        sl, sB, _, _ = tuning.select_lambda_path(X, y, W, acfg, lams=grid,
+                                                 mode="batched")
+        assert done[rid].best_lam == pytest.approx(sl, abs=1e-7)
+        np.testing.assert_allclose(done[rid].B, sB, atol=1e-5)
+
+
+@pytest.mark.serving_smoke
+def test_run_drains_and_duplicate_rid_raises(sims):
+    """Lifecycle: run() returns each result exactly once (bounded memory),
+    and a duplicate rid raises instead of silently overwriting."""
+    _, probs, lams = sims
+    acfg = ADMMConfig(lam=0.0, max_iter=MAX_ITER)
+    X, y, W = probs[0]
+    srv = DecsvmFitServer()
+    srv.submit(FitRequest(rid=5, X=X, y=y, W=W, cfg=acfg, lams=lams,
+                          mode="batched"))
+    with pytest.raises(ValueError, match="duplicate"):
+        srv.submit(FitRequest(rid=5, X=X, y=y, W=W, cfg=acfg, lams=lams,
+                              mode="batched"))
+    first = srv.run()
+    assert sorted(first) == [5]
+    assert srv.run() == {}                 # drained: delivered exactly once
+    # undelivered result also blocks rid reuse until drained
+    srv.submit(FitRequest(rid=6, X=X, y=y, W=W, cfg=acfg, lams=lams,
+                          mode="batched"))
+    h = srv.submit(FitRequest(rid=7, X=X, y=y, W=W, cfg=acfg, lams=lams,
+                              mode="batched"))
+    while srv.step():
+        pass
+    with pytest.raises(ValueError, match="duplicate"):
+        srv.submit(FitRequest(rid=6, X=X, y=y, W=W, cfg=acfg, lams=lams,
+                              mode="batched"))
+    assert h.result().rid == 7             # handle delivery drains rid 7
+    srv.submit(FitRequest(rid=7, X=X, y=y, W=W, cfg=acfg, lams=lams,
+                          mode="batched"))  # delivered rid may be reused
+    assert sorted(srv.run()) == [6, 7]
+
+
+@pytest.mark.serving_smoke
+def test_bucket_failure_surfaces_and_request_not_mutated(sims):
+    """A poisoned bucket raises from run() and from every affected handle
+    (never a silently partial result dict), and submit() resolves a
+    lams=None grid without mutating the caller's request object."""
+    _, probs, lams = sims
+    X, y, W = probs[0]
+    acfg = ADMMConfig(lam=0.0, max_iter=MAX_ITER)
+    srv = DecsvmFitServer()
+    bad = FitRequest(rid=0, X=X, y=y, W=W, cfg=acfg, lams=lams,
+                     mode="batched", penalty="not-a-penalty")
+    h = srv.submit(bad)
+    with pytest.raises(KeyError):
+        srv.run()
+    with pytest.raises(KeyError):
+        h.result()
+    # the failure was drained with the run() that raised; the server
+    # still serves, and a lams=None request is not mutated in place
+    good = FitRequest(rid=1, X=X, y=y, W=W, cfg=acfg, num=3,
+                      mode="batched")
+    srv.submit(good)
+    assert good.lams is None
+    done = srv.run()
+    assert sorted(done) == [1] and len(done[1].table) == 3
+
+
+@pytest.mark.serving_smoke
+def test_async_worker_and_handles(sims):
+    """start()/stop() async surface: handles resolve off-thread, results
+    match the synchronous server, utilization stays in [0, 1]."""
+    _, probs, lams = sims
+    acfg = ADMMConfig(lam=0.0, max_iter=MAX_ITER)
+    ref = DecsvmFitServer()
+    for i, (X, y, W) in enumerate(probs):
+        ref.submit(FitRequest(rid=i, X=X, y=y, W=W, cfg=acfg, lams=lams,
+                              mode="batched"))
+    want = ref.run()
+
+    srv = DecsvmFitServer()
+    srv.start()
+    handles = [srv.submit(FitRequest(rid=i, X=X, y=y, W=W, cfg=acfg,
+                                     lams=lams, mode="batched"))
+               for i, (X, y, W) in enumerate(probs)]
+    for i, h in enumerate(handles):
+        res = h.result(timeout=300)
+        assert h.done()
+        # the worker may split the queue into differently-sized buckets
+        # depending on submit timing; batch size only moves results ~ULPs
+        np.testing.assert_allclose(res.B, want[i].B, atol=1e-5)
+    assert 0.0 <= srv.utilization <= 1.0
+    srv.stop()
+    assert srv.pending == 0
+    assert srv.utilization == 0.0          # idle again, not stuck at last bucket
+
+
+@pytest.mark.serving_smoke
+def test_sync_result_honours_timeout(sims):
+    """result(timeout) in sync mode: an already-expired deadline raises
+    TimeoutError instead of driving buckets past it; the work still
+    resolves on the next drain."""
+    _, probs, lams = sims
+    X, y, W = probs[0]
+    acfg = ADMMConfig(lam=0.0, max_iter=MAX_ITER)
+    srv = DecsvmFitServer()
+    h = srv.submit(FitRequest(rid=0, X=X, y=y, W=W, cfg=acfg, lams=lams,
+                              mode="batched"))
+    with pytest.raises(TimeoutError):
+        h.result(timeout=0.0)
+    assert sorted(srv.run()) == [0]
+    assert h.result().rid == 0
+
+
+@pytest.mark.serving_smoke
+def test_zero_margin_ties_predict_positive(sims):
+    """Regression: an all-zero fit (grid pinned above every problem's
+    lambda_max) predicts +1 everywhere, so accuracy is the positive-class
+    rate — the old ``np.sign(margins) == y`` scored it 0.0."""
+    _, probs, lams = sims
+    X, y, W = probs[0]
+    acfg = ADMMConfig(lam=0.0, max_iter=MAX_ITER)
+    big = float(lams[0]) * 4.0
+    srv = DecsvmFitServer()
+    srv.submit(FitRequest(rid=0, X=X, y=y, W=W, cfg=acfg, lams=[big],
+                          mode="batched", threshold=True))
+    res = srv.run()[0]
+    assert np.all(res.B == 0.0)
+    pos_rate = float(np.mean(y == 1.0))
+    assert pos_rate > 0.0
+    assert res.train_accuracy == pytest.approx(pos_rate)
+    # the shared helper implements the same tie rule
+    assert metrics.margin_accuracy(np.zeros_like(y), y) == pytest.approx(
+        pos_rate)
+    assert metrics.accuracy(np.zeros(X.shape[-1]), X.reshape(-1, X.shape[-1]),
+                            y.ravel()) == pytest.approx(pos_rate)
+
+
+def test_fit_many_traced_lambda_matches_static(sims):
+    """decsvm_fit_many with traced per-problem lambdas reproduces
+    per-problem decsvm_fit at static cfg.lam."""
+    from repro.core.path import decsvm_fit_many
+    _, probs, lams = sims
+    Xs, ys, Ws = _stacked(probs)
+    per_lam = np.asarray([lams[1], lams[2], lams[3]], np.float32)
+    acfg = ADMMConfig(lam=0.0, max_iter=MAX_ITER)
+    got = np.asarray(decsvm_fit_many(jnp.asarray(Xs), jnp.asarray(ys),
+                                     jnp.asarray(Ws), per_lam, acfg))
+    for b, (X, y, W) in enumerate(probs):
+        want = decsvm_fit(jnp.asarray(np.asarray(X, np.float32)),
+                          jnp.asarray(np.asarray(y, np.float32)),
+                          jnp.asarray(np.asarray(W, np.float32)),
+                          dc.replace(acfg, lam=float(per_lam[b])))
+        np.testing.assert_allclose(got[b], np.asarray(want), atol=1e-5)
+
+
+def test_select_many_builds_shared_grid(sims):
+    """lams=None pools the per-problem lambda_max: the grid's top point
+    zeroes every problem in the bucket."""
+    _, probs, _ = sims
+    Xs, ys, Ws = _stacked(probs)
+    acfg = ADMMConfig(lam=0.0, max_iter=MAX_ITER)
+    bl, bB, tables, res = tuning.select_lambda_path_many(
+        Xs, ys, Ws, acfg, num=4, mode="batched")
+    lams = np.asarray(res.lams)
+    assert lams.shape == (NPROB, 4)
+    np.testing.assert_allclose(lams[0], lams[1])     # one shared grid
+    per_max = [float(np.max(np.abs(
+        X.reshape(-1, X.shape[-1]).T @ y.ravel())) / y.size)
+        for X, y, _ in probs]
+    assert lams[0][0] == pytest.approx(max(per_max), rel=1e-6)
+    # at the pooled lambda_max every problem is (near-)fully shrunk —
+    # |X'y|/N is the hinge-subgradient threshold, so the smoothed-loss
+    # solution is near zero rather than exactly zero
+    path0 = np.asarray(res.path)[:, 0]
+    assert np.max(np.abs(path0)) < 0.05

@@ -212,6 +212,30 @@ def test_tol_driver_kkt_rule(fixture):
     assert np.max(np.abs(np.asarray(B_kkt) - np.asarray(B_ref))) < 1e-3
 
 
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_check_every_stops_at_same_quality(fixture, use_pallas):
+    """check_every>1 skips KKT evaluations between check rounds but only
+    ever stops on a *measured* residual <= tol: the certified quality is
+    the same as checking every round (the solution can only be tighter,
+    since stopping is deferred to a check round).  use_pallas=True is the
+    single-fit Pallas path — the fused kernel returns only B_new, so the
+    residual is recomputed outside the kernel, every k rounds."""
+    cfg, X, y, Wj, _ = fixture
+    tol = 1e-5
+    acfg = ADMMConfig(lam=LAM, max_iter=3000, use_pallas=use_pallas)
+    B1, t1 = decsvm_fit_tol(X, y, Wj, acfg, tol=tol, stop_rule="kkt",
+                            check_every=1)
+    B4, t4 = decsvm_fit_tol(X, y, Wj, acfg, tol=tol, stop_rule="kkt",
+                            check_every=4)
+    assert int(t4) < 3000                      # still stops early
+    assert int(t4) % 4 == 0                    # only stops on check rounds
+    assert int(t4) >= int(t1)                  # deferred, never premature
+    prob = solver.make_problem(X, y, Wj, acfg)
+    for B in (B1, B4):                         # both stops are certified
+        assert float(solver.kkt_residual(prob, acfg, B, acfg.lam)) <= tol
+    assert np.max(np.abs(np.asarray(B4) - np.asarray(B1))) < 1e-4
+
+
 def test_kfold_masks_partition():
     masks = tuning.kfold_masks(3, 20, 4, seed=0)
     assert masks.shape == (4, 3, 20)
