@@ -1,0 +1,131 @@
+"""Round-megakernel benchmark: one fused pallas_call per k rounds vs the
+per-round two-pass engines, plus the bf16/fp32 mixed-precision mode.
+
+Variants at m=8 nodes, n=100, p=50 (the ISSUE's roofline point), all
+driving the identical Algorithm-1 math through ``decsvm_fit``:
+
+  - jnp             : pure-XLA reference (vmapped local_update + W @ B)
+  - pallas          : two-pass engine — fused (7a') primal kernel per
+                      round, neighbour sums and dual update outside
+  - megakernel      : whole check_every block in ONE pallas_call — margin
+                      weights, X^T w gradient, prox, dual accumulators
+                      and the KKT statistic never leave the kernel
+  - megakernel_bf16 : same kernel with X in bf16 for the MXU dots; B/P
+                      accumulators and the statistic stay fp32
+
+Emits ``BENCH_megakernel.json`` at the repo root (same field scale as
+BENCH_lambda_path.json: end-to-end = compile + first run, steady-state =
+post-compile min over reps).  Criteria: megakernel steady-state >= 1.5x
+the two-pass Pallas engine, fp32 parity vs jnp <= 1e-5, bf16 parity
+bound recorded.  The roofline block records the static per-round
+flops/bytes model behind the fusion: the streaming engines re-read X
+from HBM every round, the megakernel holds the whole state in VMEM and
+reads X once per k-round block.
+
+    PYTHONPATH=src python benchmarks/bench_megakernel.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from pathlib import Path
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax                     # noqa: E402  (env must be set pre-import)
+import jax.numpy as jnp        # noqa: E402
+
+from repro.core import ADMMConfig, SimConfig, decsvm_fit, generate, losses  # noqa: E402
+from repro.core.graph import erdos_renyi  # noqa: E402
+from repro.kernels.csvm_update import megakernel_vmem_bytes  # noqa: E402
+
+M, N, P, MAX_ITER = 8, 100, 50, 300
+STEADY_REPS = 5
+OUT = Path(__file__).resolve().parent.parent / "BENCH_megakernel.json"
+
+BACKENDS = ("jnp", "pallas", "megakernel", "megakernel_bf16")
+
+
+def _timed(fn, reps: int = 1):
+    """(result, best-of-reps seconds) — min is robust to scheduler noise."""
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def _roofline() -> dict:
+    """Static per-round work model at (M, N, P) — why fusing k rounds into
+    one kernel pays: compute per round is fixed, HBM traffic is not."""
+    # margins (2mnp) + weighted X^T w gradient (2mnp) + dense neighbour
+    # sums W@B and dual W@B+ (2 * 2m^2 p) + O(mp) vector work
+    flops = 4 * M * N * P + 4 * M * M * P
+    x_bytes = 4 * M * N * P                    # X re-read per round (fp32)
+    state_bytes = 4 * 4 * M * P                # B, P, B+, neighbour term
+    return {
+        "flops_per_round": flops,
+        "streaming_bytes_per_round": x_bytes + state_bytes,
+        "megakernel_bytes_per_k_rounds": x_bytes + state_bytes,
+        "arithmetic_intensity_streaming": flops / (x_bytes + state_bytes),
+        "vmem_resident_bytes_fp32": megakernel_vmem_bytes(M, N, P, 4),
+        "vmem_resident_bytes_bf16": megakernel_vmem_bytes(M, N, P, 2),
+    }
+
+
+def run() -> dict:
+    cfg = SimConfig(p=P, s=5, m=M, n=N, rho=0.5)
+    X, y, _ = generate(cfg, seed=0)
+    W = erdos_renyi(cfg.m, cfg.p_connect, seed=0)
+    Xj, yj = jnp.asarray(X), jnp.asarray(y)
+    Wj = jnp.asarray(W, jnp.float32)
+    h = losses.default_bandwidth(cfg.n_total, cfg.p)
+
+    def fit(backend):
+        acfg = ADMMConfig(lam=0.05, h=h, max_iter=MAX_ITER, backend=backend)
+        return lambda: decsvm_fit(Xj, yj, Wj, acfg)
+
+    e2e, steady, res = {}, {}, {}
+    for backend in BACKENDS:
+        fn = fit(backend)
+        out, s = _timed(fn)
+        res[backend] = out
+        e2e[backend] = s
+        _, steady[backend] = _timed(fn, STEADY_REPS)
+
+    dev = {b: float(jnp.max(jnp.abs(res[b] - res["jnp"])))
+           for b in BACKENDS if b != "jnp"}
+    thr = {b: MAX_ITER / s for b, s in steady.items()}
+    speedup = steady["pallas"] / steady["megakernel"]
+    result = {
+        "bench": "megakernel",
+        "config": {"m": M, "n": N, "p": P, "max_iter": MAX_ITER, "h": h,
+                   "backend": jax.default_backend(),
+                   "pallas_interpret": jax.default_backend() != "tpu"},
+        "end_to_end_s": e2e,
+        "steady_state_s": steady,
+        "throughput_rounds_per_s": thr,
+        "speedup_megakernel_vs_pallas": speedup,
+        "speedup_megakernel_vs_jnp": steady["jnp"] / steady["megakernel"],
+        "speedup_bf16_vs_fp32_megakernel":
+            steady["megakernel"] / steady["megakernel_bf16"],
+        "max_abs_dev_vs_jnp": dev,
+        "roofline": _roofline(),
+        "criteria": {
+            "megakernel_speedup_vs_pallas_ge_1.5":
+                bool(speedup >= 1.5),
+            "fp32_parity_vs_jnp_le_1e-5":
+                bool(dev["megakernel"] <= 1e-5),
+            "bf16_parity_bound_recorded": dev["megakernel_bf16"],
+        },
+    }
+    OUT.write_text(json.dumps(result, indent=2) + "\n")
+    print(json.dumps(result, indent=2))
+    return result
+
+
+if __name__ == "__main__":
+    run()

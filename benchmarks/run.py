@@ -1,11 +1,30 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
 from __future__ import annotations
 
+import argparse
 import sys
 import time
 
+# Named single benches runnable via ``--bench`` (JSON emitters included).
+BENCHES = ("megakernel", "kernels", "iterations", "sample_size", "topology",
+           "flips", "realworld", "theory", "mesh_path", "lambda_path",
+           "fit_serving")
+
+
+def _run_one(name: str) -> None:
+    import importlib
+    mod = importlib.import_module(f"benchmarks.bench_{name}")
+    mod.run()
+
 
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--bench", choices=BENCHES, default=None,
+                    help="run a single named benchmark instead of the suite")
+    args = ap.parse_args()
+    if args.bench is not None:
+        _run_one(args.bench)
+        return
     print("name,us_per_call,derived")
     t0 = time.time()
     from benchmarks import (bench_flips, bench_iterations, bench_kernels,

@@ -37,6 +37,8 @@ class ADMMConfig:
     max_iter: int = 300
     rho_safety: float = 1.05   # multiply the c_h * lmax bound by this
     use_pallas: bool = False   # route the local update through the TPU kernel
+    backend: str = "auto"      # "auto" (use_pallas decides) | "jnp" |
+    #                            "pallas" | "megakernel" | "megakernel_bf16"
 
 
 class ADMMState(NamedTuple):
@@ -56,10 +58,11 @@ def admm_step(X: Array, y: Array, W: Array, deg: Array, rho: Array,
     (repro.core.penalties).
     """
     omega = 1.0 / (2.0 * cfg.tau * deg + rho + cfg.lam0)
-    prob = solver.Problem(X, y, deg, rho, omega, None)
-    step = solver.make_step(cfg, lambda B: W @ B)
+    prob = solver.Problem(X.astype(solver.problem_dtype(cfg)), y, deg, rho,
+                          omega, None)
+    step = solver.make_step(cfg, lambda B: W @ B, W=W)
     st = solver.SolverState(state.B, state.P, state.t,
-                            jnp.asarray(jnp.inf, X.dtype))
+                            jnp.asarray(jnp.inf, jnp.float32))
     new = step(prob, st, cfg.lam, lam_weights)
     return ADMMState(new.B, new.P, new.t)
 
@@ -81,7 +84,7 @@ def decsvm_fit(X: Array, y: Array, W: Array, cfg: ADMMConfig,
       B: (m, p) final node estimates; and, if track_history, H: (T, m, p).
     """
     prob = solver.make_problem(X, y, W, cfg)
-    step = solver.make_step(cfg, lambda B: W @ B)
+    step = solver.make_step(cfg, lambda B: W @ B, W=W)
     state = solver.init_state(prob, B0=beta0)
     out = solver.run_fixed(step, prob, cfg.lam, lam_weights,
                            num_iters=cfg.max_iter, state=state,

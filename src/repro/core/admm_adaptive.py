@@ -46,7 +46,7 @@ def decsvm_fit_tol(X: Array, y: Array, W: Array, cfg: ADMMConfig,
     if stop_rule not in ("kkt", "progress"):
         raise ValueError(f"stop_rule {stop_rule!r} not in ('kkt', 'progress')")
     prob = solver.make_problem(X, y, W, cfg)
-    step = solver.make_step(cfg, lambda B: W @ B)
+    step = solver.make_step(cfg, lambda B: W @ B, W=W)
     residual_fn = (solver.kkt_residual_fn(cfg) if stop_rule == "kkt"
                    else None)
     final = solver.run_tol(step, prob, cfg.lam, max_iter=cfg.max_iter,
@@ -67,6 +67,6 @@ def decsvm_fit_uneven(X: Array, y: Array, mask: Array, W: Array,
     nothing).
     """
     prob = solver.make_problem(X, y, W, cfg, mask=mask)
-    step = solver.make_step(cfg, lambda B: W @ B)
+    step = solver.make_step(cfg, lambda B: W @ B, W=W)
     final = solver.run_fixed(step, prob, cfg.lam, num_iters=cfg.max_iter)
     return final.B

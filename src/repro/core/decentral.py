@@ -107,7 +107,9 @@ def _local_problem(Xl, yl, degl, rhol, cfg, mask=None) -> solver.Problem:
 def _zero_state(shape, dtype, axes) -> solver.SolverState:
     """Zero SolverState with B, P, and progress marked varying over the
     manual axes (progress starts replicated but becomes the shard-local
-    max|B_new - B| after one step; t stays replicated)."""
+    max|B_new - B| after one step; t stays replicated).  Accumulators are
+    promoted to fp32 — under the bf16 megakernel mode only X narrows."""
+    dtype = jnp.promote_types(dtype, jnp.float32)
     B = _pvary(jnp.zeros(shape, dtype), axes)
     Pd = _pvary(jnp.zeros(shape, dtype), axes)
     prog = _pvary(jnp.asarray(jnp.inf, dtype), axes)
@@ -168,9 +170,10 @@ def build_sharded_path(m: int, p: int, L: int, cfg: ADMMConfig, mesh: Mesh,
             return solver.run_fixed(step, prob, lam, lamw,
                                     num_iters=cfg.max_iter, state=state).B
 
-        B0 = _pvary(jnp.zeros((L, m_local, p), Xl.dtype), ("node",))
-        P0 = _pvary(jnp.zeros((L, m_local, p), Xl.dtype), ("node",))
-        prog0 = _pvary(jnp.full((L,), jnp.inf, Xl.dtype), ("node",))
+        sdt = jnp.promote_types(Xl.dtype, jnp.float32)
+        B0 = _pvary(jnp.zeros((L, m_local, p), sdt), ("node",))
+        P0 = _pvary(jnp.zeros((L, m_local, p), sdt), ("node",))
+        prog0 = _pvary(jnp.full((L,), jnp.inf, sdt), ("node",))
         return jax.vmap(fit_one)(lams, B0, P0, prog0)
 
     fn = shard_map(
@@ -209,10 +212,10 @@ def decsvm_fit_sharded(X: Array, y: Array, W: np.ndarray, cfg: ADMMConfig,
     m, _, p = X.shape
     Wj, deg, rho = _prep(X, W, cfg, schedule)
     node_sharded = NamedSharding(mesh, P("node"))
-    X = jax.device_put(X, node_sharded)
+    X = jax.device_put(X.astype(solver.problem_dtype(cfg)), node_sharded)
     y = jax.device_put(y, node_sharded)
     fitted = build_sharded_admm(m, p, cfg, mesh, schedule)
-    return fitted(X, y, Wj, deg, rho, _lamw(lam_weights, p, X.dtype))
+    return fitted(X, y, Wj, deg, rho, _lamw(lam_weights, p, jnp.float32))
 
 
 def decsvm_path_sharded(X: Array, y: Array, W: np.ndarray, lams,
@@ -230,13 +233,13 @@ def decsvm_path_sharded(X: Array, y: Array, W: np.ndarray, lams,
     """
     mesh = mesh or make_node_mesh()
     m, _, p = X.shape
-    lams = jnp.asarray(lams, X.dtype)
+    lams = jnp.asarray(lams, jnp.float32)
     Wj, deg, rho = _prep(X, W, cfg, schedule)
     node_sharded = NamedSharding(mesh, P("node"))
-    X = jax.device_put(X, node_sharded)
+    X = jax.device_put(X.astype(solver.problem_dtype(cfg)), node_sharded)
     y = jax.device_put(y, node_sharded)
     fitted = build_sharded_path(m, p, int(lams.shape[0]), cfg, mesh, schedule)
-    return fitted(X, y, Wj, deg, rho, lams, _lamw(lam_weights, p, X.dtype))
+    return fitted(X, y, Wj, deg, rho, lams, _lamw(lam_weights, p, jnp.float32))
 
 
 # --------------------------------------------------------------------------
@@ -254,7 +257,8 @@ def make_node_lam_mesh(n_node: int, n_lam: Optional[int] = None) -> Mesh:
 def build_mesh_path(m: int, p: int, C: int, cfg: ADMMConfig, mesh: Mesh,
                     schedule: str = "gather", mode: str = "batched",
                     tol: float = 1e-6, stop_rule: str = "kkt",
-                    with_masks: bool = False):
+                    with_masks: bool = False, check_every: int = 4,
+                    handoff: bool = True):
     """Build the 2-D (node, lam) shard_map program.  Cached on all
     arguments (jit caches by function identity — a fresh closure per call
     would recompile every time).
@@ -276,9 +280,19 @@ def build_mesh_path(m: int, p: int, C: int, cfg: ADMMConfig, mesh: Mesh,
     cfg.max_iter rounds — trajectories match the dense batched engine.
     mode "warm": sequential continuation over each device's local cell
     block with early stop on ``stop_rule`` ("kkt" residual or legacy
-    "progress"), the stop decision pmax-agreed across the node axis.
+    "progress"), the stop decision pmax-agreed across the node axis, the
+    statistic evaluated every ``check_every`` rounds (collective-safe
+    inner scan — held rounds still run their collectives).
     Continuation follows decreasing lambda; wherever lambda jumps back up
     (a full-data/fold block boundary under CV) the fit restarts cold.
+
+    ``handoff`` (warm mode, lam axis > 1): after the first traversal each
+    lam-shard ``ppermute``s its boundary solution (and its lambda) forward
+    along "lam" and re-traverses its local block warm-started from the
+    neighbouring shard — so continuation crosses shard boundaries exactly
+    like the 1-D warm path.  Cells where continuation doesn't apply
+    (shard 0, fold-block boundaries) reuse their first-sweep solution, so
+    the refinement sweep early-stops almost immediately.
     """
     if mode not in ("warm", "batched"):
         raise ValueError(f"mode {mode!r} not in ('warm', 'batched')")
@@ -309,16 +323,31 @@ def build_mesh_path(m: int, p: int, C: int, cfg: ADMMConfig, mesh: Mesh,
                                          num_iters=cfg.max_iter, state=state)
                 return final.B, final.t
 
-            B0 = _pvary(jnp.zeros((C_local, m_local, p), Xl.dtype),
+            sdt = jnp.promote_types(Xl.dtype, jnp.float32)
+            B0 = _pvary(jnp.zeros((C_local, m_local, p), sdt),
                         ("node", "lam"))
-            P0 = _pvary(jnp.zeros((C_local, m_local, p), Xl.dtype),
+            P0 = _pvary(jnp.zeros((C_local, m_local, p), sdt),
                         ("node", "lam"))
-            prog0 = _pvary(jnp.full((C_local,), jnp.inf, Xl.dtype),
+            prog0 = _pvary(jnp.full((C_local,), jnp.inf, sdt),
                            ("node", "lam"))
             path, iters = jax.vmap(fit_cell)(B0, P0, prog0, *cells)
         else:
             residual_fn = (solver.kkt_residual_fn(cfg, axis_name="node")
                            if stop_rule == "kkt" else None)
+            sdt = jnp.promote_types(Xl.dtype, jnp.float32)
+
+            def fit_from(B_init, lam, rhoc, maskc, t0=None):
+                prob = cell_problem(rhoc, maskc)
+                P0 = _pvary(jnp.zeros((m_local, p), sdt), ("node", "lam"))
+                prog0 = _pvary(jnp.asarray(jnp.inf, sdt), ("node", "lam"))
+                t_init = (jnp.zeros((), jnp.int32) if t0 is None
+                          else jnp.asarray(t0, jnp.int32))
+                state = solver.SolverState(B_init, P0, t_init, prog0)
+                return solver.run_tol(step, prob, lam, lamw,
+                                      max_iter=cfg.max_iter, tol=tol,
+                                      state=state, residual_fn=residual_fn,
+                                      axis_name="node",
+                                      check_every=check_every)
 
             def outer(carry, cell):
                 B_prev, lam_prev = carry
@@ -330,31 +359,60 @@ def build_mesh_path(m: int, p: int, C: int, cfg: ADMMConfig, mesh: Mesh,
                 # solution works against convergence — restart cold there.
                 B_init = jnp.where(lam <= lam_prev, B_prev,
                                    jnp.zeros_like(B_prev))
-                prob = cell_problem(rhoc, maskc)
-                P0 = _pvary(jnp.zeros((m_local, p), Xl.dtype),
-                            ("node", "lam"))
-                prog0 = _pvary(jnp.asarray(jnp.inf, Xl.dtype),
-                               ("node", "lam"))
-                state = solver.SolverState(B_init, P0,
-                                           jnp.zeros((), jnp.int32), prog0)
-                final = solver.run_tol(step, prob, lam, lamw,
-                                       max_iter=cfg.max_iter, tol=tol,
-                                       state=state, residual_fn=residual_fn,
-                                       axis_name="node")
+                final = fit_from(B_init, lam, rhoc, maskc)
                 return (final.B, lam), (final.B, final.t)
 
-            B0 = _pvary(jnp.zeros((m_local, p), Xl.dtype), ("node", "lam"))
-            lam0 = jnp.asarray(jnp.inf, Xl.dtype)
-            _, (path, iters) = jax.lax.scan(outer, (B0, lam0), cells)
+            B0 = _pvary(jnp.zeros((m_local, p), sdt), ("node", "lam"))
+            lam0 = jnp.asarray(jnp.inf, sdt)
+            (B_last, lam_last), (path, iters) = jax.lax.scan(
+                outer, (B0, lam0), cells)
 
-        # -- fused scoring (modified BIC + held-out hinge), psum over nodes
+            if handoff and nl > 1:
+                # Cross-shard warm-start hand-off: the first traversal ran
+                # every shard's block cold at its boundary.  Shift each
+                # shard's final (B, lambda) one step along "lam" (shard 0
+                # receives zeros/lam=0 from the unaddressed permute slot)
+                # and re-traverse warm: wherever continuation applies
+                # (lambda still decreasing across the boundary) the cell
+                # restarts from the neighbouring shard's boundary solution
+                # with a full iteration budget — exactly the init the 1-D
+                # warm path would have used.  Cells where continuation
+                # doesn't apply (shard 0, fold-block boundaries) *resume*
+                # their first sweep instead: same iterate, same remaining
+                # budget, so a converged cell re-certifies in one
+                # ``check_every`` block and a max_iter-capped cell is a
+                # no-op.  ``iters`` reports the sweep-2 rounds per cell —
+                # the rounds of the final traversal, matching the dense
+                # warm path's accounting (sweep 1 is pipeline fill).
+                perm = [(j, j + 1) for j in range(nl - 1)]
+                B_in = jax.lax.ppermute(B_last, "lam", perm)
+                lam_in = jax.lax.ppermute(lam_last, "lam", perm)
+
+                def outer2(carry, xs):
+                    B_prev, lam_prev = carry
+                    lam, rhoc = xs[0], xs[1]
+                    maskc = xs[2] if len(xs) == 5 else None
+                    B_sweep1, it1 = xs[-2], xs[-1]
+                    cont = lam <= lam_prev
+                    B_init = jnp.where(cont, B_prev, B_sweep1)
+                    t0 = jnp.where(cont, 0, it1)
+                    final = fit_from(B_init, lam, rhoc, maskc, t0=t0)
+                    return (final.B, lam), (final.B, final.t)
+
+                _, (path, iters) = jax.lax.scan(
+                    outer2, (B_in, lam_in), cells + (path, iters))
+
+        # -- fused scoring (modified BIC + held-out hinge), psum over nodes;
+        # accumulated fp32 regardless of the X compute dtype
         N_total = m * n
-        margins = jnp.einsum("mnp,cmp->cmn", Xl, path) * yl[None]
+        f32 = jnp.float32
+        margins = jnp.einsum("mnp,cmp->cmn", Xl, path,
+                             preferred_element_type=f32) * yl[None]
         hinge = jnp.maximum(1.0 - margins, 0.0)              # (C_local, m, n)
         if cell_masks is None:
             hinge_in = jax.lax.psum(jnp.sum(hinge, axis=(1, 2)), "node")
-            n_in = jnp.asarray(N_total, Xl.dtype)
-            val_hinge = jnp.zeros((C_local,), Xl.dtype)
+            n_in = jnp.asarray(N_total, f32)
+            val_hinge = jnp.zeros((C_local,), f32)
         else:
             hinge_in = jax.lax.psum(
                 jnp.sum(hinge * cell_masks, axis=(1, 2)), "node")
@@ -365,7 +423,7 @@ def build_mesh_path(m: int, p: int, C: int, cfg: ADMMConfig, mesh: Mesh,
             n_in = jax.lax.psum(jnp.sum(cell_masks, axis=(1, 2)), "node")
             val_hinge = hinge_out / jnp.maximum(n_out, 1.0)
         supp = jax.lax.psum(
-            jnp.sum((jnp.abs(path) > 1e-8).astype(Xl.dtype), axis=(1, 2)),
+            jnp.sum((jnp.abs(path) > 1e-8).astype(f32), axis=(1, 2)),
             "node")
         bic = (hinge_in / n_in
                + _math.sqrt(_math.log(N_total)) * _math.log(p)
@@ -388,7 +446,8 @@ def decsvm_path_mesh(X: Array, y: Array, W: np.ndarray, lams,
                      tol: float = 1e-6,
                      lam_weights: Optional[Array] = None,
                      stop_rule: str = "kkt", criterion: str = "bic",
-                     cv_folds: int = 5, cv_seed: int = 0):
+                     cv_folds: int = 5, cv_seed: int = 0,
+                     check_every: int = 4, handoff: bool = True):
     """Lambda path on a true 2-D (node, lam) device mesh, with selection.
 
     The L-point grid is sharded over the "lam" mesh axis (today's 1-D
@@ -397,6 +456,11 @@ def decsvm_path_mesh(X: Array, y: Array, W: np.ndarray, lams,
     full-data fits, fold fits, and both scoring rules run inside one
     shard_map program.  Returns ``repro.core.path.PathResult`` whose
     ``criteria`` is the selected rule's score per grid point.
+
+    Warm mode evaluates the stop statistic every ``check_every`` rounds
+    and, with ``handoff`` (default), ppermutes each lam-shard's boundary
+    solution forward so continuation matches the 1-D warm path across
+    shard boundaries (see ``build_mesh_path``).
 
     Requires m % node-axis == 0 and #cells % lam-axis == 0.
     cfg.lam is ignored (the grid supplies lambda).
@@ -438,19 +502,23 @@ def decsvm_path_mesh(X: Array, y: Array, W: np.ndarray, lams,
     Wj = jnp.asarray(W, X.dtype)
     deg = jnp.sum(Wj, axis=1)
 
-    X_s = jax.device_put(X, NamedSharding(mesh, P("node")))
+    # X narrows to the backend's compute dtype only now — rho (above) and
+    # the scoring operands stay fp32
+    X_c = X.astype(solver.problem_dtype(cfg))
+    X_s = jax.device_put(X_c, NamedSharding(mesh, P("node")))
     y_s = jax.device_put(y, NamedSharding(mesh, P("node")))
     rho_s = jax.device_put(cell_rho, NamedSharding(mesh, P("lam", "node")))
-    lams_s = jax.device_put(jnp.asarray(cell_lams, X.dtype),
+    lams_s = jax.device_put(jnp.asarray(cell_lams, jnp.float32),
                             NamedSharding(mesh, P("lam")))
     operands = [X_s, y_s, Wj, deg, lams_s, rho_s,
-                _lamw(lam_weights, p, X.dtype)]
+                _lamw(lam_weights, p, jnp.float32)]
     if cell_masks is not None:
         operands.append(jax.device_put(
             cell_masks, NamedSharding(mesh, P("lam", "node"))))
 
     fitted = build_mesh_path(m, p, C, cfg, mesh, schedule, mode, tol,
-                             stop_rule, with_masks=cell_masks is not None)
+                             stop_rule, with_masks=cell_masks is not None,
+                             check_every=check_every, handoff=handoff)
     path_cells, scores, iters = fitted(*operands)
 
     path = path_cells[:L]

@@ -74,7 +74,7 @@ def decsvm_path_batched(X: Array, y: Array, W: Array, lams: Array,
     Returns the path B: (L, m, p).  cfg.lam is ignored.
     """
     prob = solver.make_problem(X, y, W, cfg)
-    step = solver.make_step(cfg, lambda B: W @ B)
+    step = solver.make_step(cfg, lambda B: W @ B, W=W)
     lams = jnp.asarray(lams, X.dtype)
 
     def fit_one(lam):
@@ -105,7 +105,7 @@ def decsvm_path_warm(X: Array, y: Array, W: Array, lams: Array,
     if stop_rule not in ("kkt", "progress"):
         raise ValueError(f"stop_rule {stop_rule!r} not in ('kkt', 'progress')")
     prob = solver.make_problem(X, y, W, cfg)
-    step = solver.make_step(cfg, lambda B: W @ B)
+    step = solver.make_step(cfg, lambda B: W @ B, W=W)
     lams = jnp.asarray(lams, X.dtype)
     residual_fn = (solver.kkt_residual_fn(cfg) if stop_rule == "kkt"
                    else None)
@@ -143,7 +143,7 @@ def decsvm_path_cv(X: Array, y: Array, W: Array, lams: Array,
     grid point — lower is better.
     """
     lams = jnp.asarray(lams, X.dtype)
-    step = solver.make_step(cfg, lambda B: W @ B)
+    step = solver.make_step(cfg, lambda B: W @ B, W=W)
 
     def fold_scores(mask):
         prob = solver.make_problem(X, y, W, cfg, mask=mask)
@@ -241,7 +241,7 @@ def decsvm_fit_many(Xs: Array, ys: Array, Ws: Array, lams: Array,
 
     def one(X, y, W, lam, w):
         prob = solver.make_problem(X, y, W, cfg)
-        step = solver.make_step(cfg, lambda B: W @ B)
+        step = solver.make_step(cfg, lambda B: W @ B, W=W)
         return solver.run_fixed(step, prob, lam, w,
                                 num_iters=cfg.max_iter).B
 

@@ -47,17 +47,32 @@ def soft_threshold(v: Array, t) -> Array:
 
 
 def power_iteration_lmax(X: Array, iters: int = 50) -> Array:
-    """Largest eigenvalue of X'X/n, matrix-free (X: (n, p))."""
-    n = X.shape[0]
-    v = jnp.full((X.shape[1],), 1.0 / jnp.sqrt(X.shape[1]), X.dtype)
+    """Largest eigenvalue of X'X/n, matrix-free (X: (n, p)).
+
+    The start vector is seeded deterministically from the operand *shape*
+    (not an implicit global key, and not a constant vector — the old
+    all-equal start is orthogonal to any leading eigenvector with zero
+    coordinate sum, where the Rayleigh quotient silently returned ~0 and
+    ``compute_rho`` under-regularized).  Iterations guard the normalization
+    so a degenerate node shard (all-zero rows, e.g. a fully-masked CV
+    block) yields lmax = 0 instead of NaN.
+    """
+    n, p = X.shape
+    key = jax.random.PRNGKey(n * 1000003 + p)
+    v = jax.random.normal(key, (p,), jnp.float32).astype(X.dtype)
+    v = v / jnp.linalg.norm(v)
 
     def body(v, _):
         w = X.T @ (X @ v) / n
-        return w / (jnp.linalg.norm(w) + 1e-30), None
+        nrm = jnp.linalg.norm(w)
+        safe = jnp.where(nrm > 0.0, nrm, 1.0)
+        return jnp.where(nrm > 0.0, w / safe, v), None
 
     v, _ = jax.lax.scan(body, v, None, length=iters)
     w = X.T @ (X @ v) / n
-    return jnp.vdot(v, w) / (jnp.vdot(v, v) + 1e-30)
+    vv = jnp.vdot(v, v)
+    return jnp.where(vv > 0.0,
+                     jnp.vdot(v, w) / jnp.where(vv > 0.0, vv, 1.0), 0.0)
 
 
 def compute_rho(X: Array, h: float, kernel: str, safety: float = 1.05,
@@ -102,15 +117,49 @@ class Problem(NamedTuple):
     mask: Optional[Array] = None
 
 
+# Backends of the local update / round, selected by ``cfg.backend``:
+#   "jnp"             the reference vmapped ``local_update``
+#   "pallas"          the two-pass fused kernel, vmapped over nodes
+#   "megakernel"      whole-round fused kernel (fp32 compute)
+#   "megakernel_bf16" same, X and MXU operands bf16; accumulators fp32
+# "auto" defers to the legacy ``use_pallas`` flag.
+MEGAKERNEL_BACKENDS = ("megakernel", "megakernel_bf16")
+BACKENDS = ("auto", "jnp", "pallas") + MEGAKERNEL_BACKENDS
+
+
+def resolve_backend(cfg, use_pallas: Optional[bool] = None) -> str:
+    """Normalize ``cfg.backend`` (+ the legacy use_pallas override)."""
+    backend = getattr(cfg, "backend", "auto").replace("-", "_")
+    if backend not in BACKENDS:
+        raise ValueError(f"backend {backend!r} not in {BACKENDS}")
+    if backend == "auto":
+        pallas = cfg.use_pallas if use_pallas is None else use_pallas
+        return "pallas" if pallas else "jnp"
+    return backend
+
+
+def problem_dtype(cfg):
+    """Compute dtype for X (the mixed-precision knob): bf16 only under the
+    megakernel_bf16 backend; accumulators stay fp32 regardless."""
+    if resolve_backend(cfg) == "megakernel_bf16":
+        return jnp.bfloat16
+    return jnp.float32
+
+
 def make_problem(X: Array, y: Array, W: Array, cfg,
                  mask: Optional[Array] = None,
                  rho: Optional[Array] = None) -> Problem:
-    """Assemble a ``Problem`` from stacked node blocks and the adjacency."""
+    """Assemble a ``Problem`` from stacked node blocks and the adjacency.
+
+    rho/omega are always computed in the incoming (fp32) precision; X is
+    cast to the backend's compute dtype *afterwards*, so the bf16 mode
+    changes only the per-round matmul operands, never the step sizes.
+    """
     deg = jnp.sum(W, axis=1)
     if rho is None:
         rho = compute_rho(X, cfg.h, cfg.kernel, cfg.rho_safety, mask=mask)
     omega = 1.0 / (2.0 * cfg.tau * deg + rho + cfg.lam0)
-    return Problem(X, y, deg, rho, omega, mask)
+    return Problem(X.astype(problem_dtype(cfg)), y, deg, rho, omega, mask)
 
 
 def local_update(X: Array, y: Array, beta: Array, p_dual: Array,
@@ -138,66 +187,126 @@ def local_update(X: Array, y: Array, beta: Array, p_dual: Array,
 
 
 def make_step(cfg, neighbor_sum: Callable[[Array], Array], *,
-              use_pallas: Optional[bool] = None):
+              use_pallas: Optional[bool] = None,
+              W: Optional[Array] = None):
     """Build one traced-``(lam, lam_weights)`` Algorithm-1 round.
 
     ``neighbor_sum(B) -> (m, p)`` supplies  (W B)_l = sum_{k in N(l)} b_k
     for the node rows the caller holds (all of them in the dense engine, a
-    shard inside ``shard_map``).  ``use_pallas`` routes the local update
-    through the fused TPU kernel (default: ``cfg.use_pallas``).
+    shard inside ``shard_map``).  The local-update backend comes from
+    ``cfg.backend`` (``resolve_backend``): the jnp reference, the two-pass
+    Pallas kernel (``use_pallas`` is the legacy override), or the round
+    megakernel (fp32 / bf16-compute).
+
+    Dense drivers additionally pass the adjacency ``W`` itself: under a
+    megakernel backend the returned step then carries a ``step.round_block``
+    attribute — ``round_block(prob, state, lam, lam_weights, num_rounds=,
+    rounds_active=, want_kkt=)`` running k fused rounds (and the KKT stop
+    statistic) in ONE kernel launch, which ``run_fixed``/``run_tol`` use as
+    their fast path.  Sharded engines (no dense W) get the fused
+    block-update kernel per round with their collectives in between.
 
     Returns ``step(prob, state, lam, lam_weights=None) -> SolverState``
     with lam a traced scalar and lam_weights an optional traced (p,)
     per-coordinate multiplier (adaptive/SCAD/MCP via one-step LLA).
     """
     tau, h, kernel = cfg.tau, cfg.h, cfg.kernel
-    pallas = cfg.use_pallas if use_pallas is None else use_pallas
+    backend = resolve_backend(cfg, use_pallas)
+
+    def _lam_vec(lam, lam_weights, p_dim):
+        if lam_weights is None:
+            return jnp.broadcast_to(jnp.asarray(lam, jnp.float32), (p_dim,))
+        return jnp.asarray(lam * lam_weights, jnp.float32)
+
+    def _primal(prob, B, P, neigh_term, lam_vec):
+        """B_new via the selected backend.  The fused kernels have no
+        sample-mask operand: masked fits (uneven n, CV folds) must take the
+        jnp reference backend or held-out rows would silently count as real
+        samples."""
+        if backend == "pallas" and prob.mask is None:
+            from repro.kernels import ops  # lazy: kernels dep is optional here
+            return jax.vmap(
+                lambda Xl, yl, bl, pl_, nl, rl, wl: ops.csvm_local_update(
+                    Xl, yl, bl, pl_, nl, rl, wl, lam_vec, h=h, kernel=kernel)
+            )(prob.X, prob.y, B, P, neigh_term, prob.rho, prob.omega)
+        if backend in MEGAKERNEL_BACKENDS and prob.mask is None:
+            from repro.kernels import ops
+            if ops.megakernel_supported(*prob.X.shape, prob.X.dtype):
+                return ops.csvm_block_update(
+                    prob.X, prob.y, B, P, neigh_term, prob.rho, prob.omega,
+                    lam_vec, h=h, kernel=kernel)
+        in_axes = (0, 0, 0, 0, 0, 0, 0, None)
+        args = (prob.X, prob.y, B, P, neigh_term, prob.rho, prob.omega,
+                lam_vec)
+        if prob.mask is None:
+            return jax.vmap(
+                lambda *a: local_update(*a, h=h, kernel=kernel),
+                in_axes=in_axes)(*args)
+        return jax.vmap(
+            lambda *a: local_update(*a[:-1], h=h, kernel=kernel, mask=a[-1]),
+            in_axes=in_axes + (0,))(*args, prob.mask)
 
     def step(prob: Problem, state: SolverState, lam,
              lam_weights: Optional[Array] = None) -> SolverState:
         B, P = state.B, state.P
         neigh_term = tau * (prob.deg[:, None] * B + neighbor_sum(B))
-        p_dim = B.shape[-1]
-        if lam_weights is None:
-            lam_vec = jnp.broadcast_to(jnp.asarray(lam, B.dtype), (p_dim,))
-        else:
-            lam_vec = lam * lam_weights
-        # The fused kernel has no sample-mask operand: masked fits
-        # (uneven n, CV folds) must take the jnp reference backend or the
-        # held-out rows would silently count as real samples.
-        if pallas and prob.mask is None:
-            from repro.kernels import ops  # lazy: kernels dep is optional here
-            B_new = jax.vmap(
-                lambda Xl, yl, bl, pl_, nl, rl, wl: ops.csvm_local_update(
-                    Xl, yl, bl, pl_, nl, rl, wl, lam_vec, h=h, kernel=kernel)
-            )(prob.X, prob.y, B, P, neigh_term, prob.rho, prob.omega)
-        else:
-            in_axes = (0, 0, 0, 0, 0, 0, 0, None)
-            args = (prob.X, prob.y, B, P, neigh_term, prob.rho, prob.omega,
-                    lam_vec)
-            if prob.mask is None:
-                B_new = jax.vmap(
-                    lambda *a: local_update(*a, h=h, kernel=kernel),
-                    in_axes=in_axes)(*args)
-            else:
-                B_new = jax.vmap(
-                    lambda *a: local_update(*a[:-1], h=h, kernel=kernel,
-                                            mask=a[-1]),
-                    in_axes=in_axes + (0,))(*args, prob.mask)
+        lam_vec = _lam_vec(lam, lam_weights, B.shape[-1])
+        B_new = _primal(prob, B, P, neigh_term, lam_vec)
         P_new = P + tau * (prob.deg[:, None] * B_new - neighbor_sum(B_new))
         return SolverState(B_new, P_new, state.t + 1,
                            jnp.max(jnp.abs(B_new - B)))
+
+    if backend in MEGAKERNEL_BACKENDS and W is not None:
+
+        def round_block(prob, state, lam, lam_weights, *, num_rounds: int,
+                        rounds_active, want_kkt: bool) -> SolverState:
+            """``num_rounds`` fused rounds in one megakernel launch; the
+            first ``rounds_active`` (traced, <= num_rounds) advance the
+            iterate, the rest are held.  ``state.progress`` returns as the
+            KKT residual (``want_kkt``) or the last active round's max|dB|.
+            Falls back to an equivalent scan of single rounds when the
+            problem is masked or exceeds the VMEM residency budget."""
+            from repro.kernels import ops
+            lam_vec = _lam_vec(lam, lam_weights, state.B.shape[-1])
+            if (prob.mask is None
+                    and ops.megakernel_supported(*prob.X.shape,
+                                                 prob.X.dtype)):
+                Bn, Pn, stat = ops.csvm_round_block(
+                    prob.X, prob.y, state.B, state.P, W, prob.deg, prob.rho,
+                    prob.omega, lam_vec, rounds_active, tau=tau,
+                    lam0=cfg.lam0, h=h, kernel=kernel,
+                    num_rounds=num_rounds, want_kkt=want_kkt)
+                t_new = state.t + jnp.asarray(rounds_active, state.t.dtype)
+                return SolverState(Bn, Pn, t_new, stat)
+
+            def inner(s, i):
+                stepped = step(prob, s, lam, lam_weights)
+                held = jax.tree.map(
+                    lambda a, b: jnp.where(i < rounds_active, a, b),
+                    stepped, s)
+                return held, None
+
+            new, _ = jax.lax.scan(inner, state, jnp.arange(num_rounds))
+            if want_kkt:
+                stat = kkt_residual(prob, cfg, new.B, lam, lam_weights)
+                return new._replace(progress=stat)
+            return new
+
+        step.round_block = round_block
 
     return step
 
 
 def init_state(prob: Problem, B0: Optional[Array] = None,
                P0: Optional[Array] = None) -> SolverState:
+    """Accumulators (B, P, progress) live in fp32 even when X is bf16 —
+    the mixed-precision discipline keeps state exact across rounds."""
     m, _, p = prob.X.shape
-    B = jnp.zeros((m, p), prob.X.dtype) if B0 is None else B0
+    dt = jnp.promote_types(prob.X.dtype, jnp.float32)
+    B = jnp.zeros((m, p), dt) if B0 is None else B0
     P = jnp.zeros_like(B) if P0 is None else P0
     return SolverState(B, P, jnp.zeros((), jnp.int32),
-                       jnp.asarray(jnp.inf, prob.X.dtype))
+                       jnp.asarray(jnp.inf, dt))
 
 
 def run_fixed(step, prob: Problem, lam, lam_weights=None, *,
@@ -207,8 +316,17 @@ def run_fixed(step, prob: Problem, lam, lam_weights=None, *,
 
     Returns the final ``SolverState``; with ``track_history`` also the
     (T, m, p) iterate history.
+
+    When ``step`` carries the megakernel's ``round_block`` (dense drivers
+    under a megakernel backend) and no history is requested, the whole run
+    is ONE kernel launch — the fori-loop over rounds lives on-chip.
     """
     state = init_state(prob) if state is None else state
+    round_block = getattr(step, "round_block", None)
+    if round_block is not None and not track_history and num_iters > 0:
+        return round_block(prob, state, lam, lam_weights,
+                           num_rounds=num_iters, rounds_active=num_iters,
+                           want_kkt=False)
 
     def body(state, _):
         new = step(prob, state, lam, lam_weights)
@@ -240,8 +358,13 @@ def run_tol(step, prob: Problem, lam, lam_weights=None, *, max_iter: int,
     a full network-gradient evaluation, so k>1 removes that per-round
     overhead — including under ``vmap`` (a ``lax.cond`` would lower to
     ``select`` there and evaluate the residual every round anyway).
-    Keep ``check_every=1`` when ``residual_fn`` contains collectives
-    that must run unconditionally on every round (sharded drivers).
+    The inner scan is collective-safe: held rounds still execute their
+    collectives unconditionally (``jnp.where`` on the results, never a
+    ``lax.cond`` around them), so sharded drivers can run k>1 too.
+
+    When ``step`` carries the megakernel's ``round_block`` and the
+    statistic is the KKT residual (or plain progress), each k-round block
+    plus its statistic is ONE fused kernel launch.
     """
     state = init_state(prob) if state is None else state
 
@@ -252,6 +375,18 @@ def run_tol(step, prob: Problem, lam, lam_weights=None, *, max_iter: int,
         if residual_fn is not None:
             return residual_fn(prob, new, lam, lam_weights)
         return new.progress
+
+    round_block = getattr(step, "round_block", None)
+    use_fused = (round_block is not None and axis_name is None
+                 and prob.mask is None
+                 and (residual_fn is None
+                      or getattr(residual_fn, "kind", None) == "kkt"))
+
+    def fused_body(state):
+        nact = jnp.minimum(check_every, max_iter - state.t)
+        return round_block(prob, state, lam, lam_weights,
+                           num_rounds=check_every, rounds_active=nact,
+                           want_kkt=residual_fn is not None)
 
     def body(state):
         if check_every > 1:
@@ -270,16 +405,19 @@ def run_tol(step, prob: Problem, lam, lam_weights=None, *, max_iter: int,
                 progress=jax.lax.pmax(new.progress, axis_name))
         return new
 
-    return jax.lax.while_loop(cond, body, state)
+    return jax.lax.while_loop(cond, fused_body if use_fused else body, state)
 
 
 def kkt_residual_fn(cfg, axis_name: Optional[str] = None):
     """Adapter factory: the ``residual_fn`` shape ``run_tol`` expects,
     closing over cfg (and the mesh axis for sharded drivers).  Shared by
-    every KKT-stopping driver so the adapter exists once."""
+    every KKT-stopping driver so the adapter exists once.  ``fn.kind``
+    tags the statistic so ``run_tol`` knows the megakernel's in-pass KKT
+    epilogue computes the same quantity and may fuse it."""
     def fn(prob, state, lam, lam_weights):
         return kkt_residual(prob, cfg, state.B, lam, lam_weights,
                             axis_name=axis_name)
+    fn.kind = "kkt"
     return fn
 
 

@@ -148,3 +148,226 @@ def csvm_local_update(X, y, beta, p_dual, neigh, rho, omega, lam, *,
 
 def _rup(x: int, mult: int) -> int:
     return ((x + mult - 1) // mult) * mult
+
+
+# --------------------------------------------------------------------------
+# Round megakernel: the whole check_every=k inner loop in one pallas_call
+# --------------------------------------------------------------------------
+#
+# The two-pass kernel above still leaves the (7a') prox, neighbour sum, dual
+# update, and (every k rounds) the KKT statistic in XLA ops between kernel
+# launches, with B/P spilled to HBM after every half-round.  The megakernel
+# keeps the whole network state — X (m, n, p), labels, W, B, P — resident in
+# VMEM and runs k full ADMM rounds in a single on-chip fori_loop, computing
+# the KKT stop statistic in the same pass on the way out.  X is streamed
+# through the MXU twice per round (margins, then X^T w) and never leaves
+# VMEM between rounds.
+#
+# dtype discipline (the bf16 mode): X and both MXU operand casts take the
+# *compute* dtype (X.dtype — fp32 or bf16); every accumulator — B, P, the
+# margin/gradient products (via preferred_element_type), and the KKT
+# statistic — stays fp32.  See kernels/README.md for the full rules.
+#
+# Padding semantics (host-side, in the wrapper):
+#   n rows:  y = 0  => dloss * y = 0, padded samples never contribute;
+#   p cols:  X = lam = 0 => z = 0 stays 0 through the soft-threshold;
+#   m rows:  X = y = W = deg = omega = 0 => B, P rows stay identically 0,
+#            and the KKT consensus max masks them with an iota row filter.
+
+
+def _round_megakernel(x_ref, y_ref, wadj_ref, deg_ref, rho_ref, omega_ref,
+                      lam_ref, nact_ref, b0_ref, p0_ref,
+                      bout_ref, pout_ref, stat_ref, *, tau: float,
+                      lam0: float, h: float, kernel: str, num_rounds: int,
+                      n_real: int, m_real: int, want_kkt: bool):
+    """k full ADMM rounds + optional KKT epilogue, all state in VMEM.
+
+    Shapes (padded): X (M, N, P) compute-dtype; y (M, N); W (M, M);
+    deg/rho/omega (M, 1); lam (1, P); nact (1, 1) traced round count
+    (rounds past it are held — the while-driver's max_iter guard); B/P
+    (M, P) fp32.  Outputs: B, P (M, P) fp32 and the (1, 1) stop statistic
+    (KKT residual when ``want_kkt``, else max|B_k - B_{k-1}|).
+    """
+    kern = losses.get_kernel(kernel)
+    X = x_ref[...]
+    Y = y_ref[...]
+    A = wadj_ref[...]
+    deg = deg_ref[...]
+    rho = rho_ref[...]
+    omega = omega_ref[...]
+    lam = lam_ref[...]
+    nact = nact_ref[0, 0]
+    cd = X.dtype
+    inv_n = 1.0 / n_real
+
+    def grad_all(B):
+        # margins_l = X_l @ b_l per node: batched (M, N, P) x (M, P) dot.
+        marg = jax.lax.dot_general(
+            X, B.astype(cd), (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)              # (M, N) fp32
+        wts = kern.dloss(Y * marg, h) * Y * inv_n
+        return jax.lax.dot_general(
+            X, wts.astype(cd), (((1,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)              # (M, P) fp32
+
+    def round_body(i, carry):
+        B, P, delta = carry
+        active = i < nact
+        WB = jnp.dot(A, B, preferred_element_type=jnp.float32)
+        z = rho * B - grad_all(B) - P + tau * (deg * B + WB)
+        zo = omega * z
+        thr = lam * omega
+        Bn = jnp.sign(zo) * jnp.maximum(jnp.abs(zo) - thr, 0.0)
+        WBn = jnp.dot(A, Bn, preferred_element_type=jnp.float32)
+        Pn = P + tau * (deg * Bn - WBn)
+        d = jnp.max(jnp.abs(Bn - B))
+        hold = lambda new, old: jnp.where(active, new, old)
+        return hold(Bn, B), hold(Pn, P), hold(d, delta)
+
+    B, P, delta = jax.lax.fori_loop(
+        0, num_rounds, round_body,
+        (b0_ref[...], p0_ref[...], jnp.asarray(jnp.inf, jnp.float32)))
+    bout_ref[...] = B
+    pout_ref[...] = P
+
+    if want_kkt:
+        # Same pass, same VMEM-resident X: stationarity (unit-step
+        # prox-gradient fixed point at beta_bar) + consensus, the statistic
+        # of ``solver.kkt_residual``.  Flattening (M, N, P) -> (M*N, P)
+        # turns the network-mean gradient into one MXU dot.
+        Mp, Np, Pp = X.shape
+        bb = jnp.sum(B, axis=0, keepdims=True) * (1.0 / m_real)   # (1, P)
+        X2 = X.reshape(Mp * Np, Pp)
+        marg = jnp.dot(X2, bb.astype(cd).T,
+                       preferred_element_type=jnp.float32).reshape(Mp, Np)
+        wts = kern.dloss(Y * marg, h) * Y
+        g = jnp.dot(wts.reshape(1, Mp * Np).astype(cd), X2,
+                    preferred_element_type=jnp.float32) * (inv_n / m_real)
+        g = g + lam0 * bb
+        v = bb - g
+        prox = jnp.sign(v) * jnp.maximum(jnp.abs(v) - lam, 0.0)
+        stat = jnp.max(jnp.abs(bb - prox))
+        rows = jax.lax.broadcasted_iota(jnp.int32, (Mp, 1), 0)
+        cons = jnp.max(jnp.where(rows < m_real, jnp.abs(B - bb), 0.0))
+        stat_ref[...] = jnp.maximum(stat, cons).reshape(1, 1)
+    else:
+        stat_ref[...] = delta.reshape(1, 1)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("tau", "lam0", "h", "kernel", "num_rounds", "want_kkt",
+                     "interpret"))
+def csvm_round_block(X, y, B, P, W, deg, rho, omega, lam_vec, nact, *,
+                     tau: float, lam0: float, h: float,
+                     kernel: str = "epanechnikov", num_rounds: int = 1,
+                     want_kkt: bool = False, interpret: bool = True):
+    """``num_rounds`` fused ADMM rounds over the whole network.
+
+    X (m, n, p) in the compute dtype (fp32 or bf16 — the mixed-precision
+    mode); y (m, n); B/P (m, p) fp32 accumulators; W (m, m); deg/rho/omega
+    (m,); lam_vec (p,); nact a traced round count <= num_rounds (rounds
+    past it are held, so ``run_tol`` never overshoots max_iter).
+    Returns (B, P, stat) with fp32 B/P and stat the KKT residual
+    (``want_kkt``) or last-active-round progress max|dB|.
+    """
+    m, n, p = X.shape
+    cd = jnp.bfloat16 if X.dtype == jnp.bfloat16 else jnp.float32
+    sub = 16 if cd == jnp.bfloat16 else 8
+    m_pad, n_pad, p_pad = _rup(m, 8), _rup(n, sub), _rup(p, 128)
+    f32 = jnp.float32
+    Xp = jnp.pad(X.astype(cd), ((0, m_pad - m), (0, n_pad - n),
+                                (0, p_pad - p)))
+    yp = jnp.pad(y.astype(f32), ((0, m_pad - m), (0, n_pad - n)))
+    Bp = jnp.pad(B.astype(f32), ((0, m_pad - m), (0, p_pad - p)))
+    Pp = jnp.pad(P.astype(f32), ((0, m_pad - m), (0, p_pad - p)))
+    Wp = jnp.pad(W.astype(f32), ((0, m_pad - m), (0, m_pad - m)))
+    col = lambda v: jnp.pad(v.astype(f32), (0, m_pad - m))[:, None]
+    lam_row = jnp.broadcast_to(jnp.asarray(lam_vec, f32).reshape(-1), (p,))
+    lam_row = jnp.pad(lam_row, (0, p_pad - p))[None, :]
+    nact2 = jnp.asarray(nact, jnp.int32).reshape(1, 1)
+
+    Bn, Pn, stat = pl.pallas_call(
+        functools.partial(
+            _round_megakernel, tau=tau, lam0=lam0, h=h, kernel=kernel,
+            num_rounds=num_rounds, n_real=n, m_real=m, want_kkt=want_kkt),
+        out_shape=(
+            jax.ShapeDtypeStruct((m_pad, p_pad), f32),
+            jax.ShapeDtypeStruct((m_pad, p_pad), f32),
+            jax.ShapeDtypeStruct((1, 1), f32),
+        ),
+        interpret=interpret,
+    )(Xp, yp, Wp, col(deg), col(rho), col(omega), lam_row, nact2, Bp, Pp)
+    return Bn[:m, :p], Pn[:m, :p], stat[0, 0]
+
+
+def _block_update_kernel(x_ref, y_ref, b_ref, p_ref, neigh_ref, rho_ref,
+                         omega_ref, lam_ref, out_ref, *, h: float,
+                         kernel: str, n_real: int):
+    """Fused (7a') for a whole (m_local, n, p) node block: margins ->
+    weights -> X^T w -> soft-threshold, one VMEM residency.  The neighbour
+    term arrives as an operand so sharded engines can run their collective
+    between kernel launches."""
+    kern = losses.get_kernel(kernel)
+    X = x_ref[...]
+    Y = y_ref[...]
+    B = b_ref[...]
+    cd = X.dtype
+    marg = jax.lax.dot_general(
+        X, B.astype(cd), (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
+    wts = kern.dloss(Y * marg, h) * Y * (1.0 / n_real)
+    grad = jax.lax.dot_general(
+        X, wts.astype(cd), (((1,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
+    z = rho_ref[...] * B - grad - p_ref[...] + neigh_ref[...]
+    zo = omega_ref[...] * z
+    thr = lam_ref[...] * omega_ref[...]
+    out_ref[...] = jnp.sign(zo) * jnp.maximum(jnp.abs(zo) - thr, 0.0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("h", "kernel", "interpret"))
+def csvm_block_update(X, y, B, P, neigh, rho, omega, lam_vec, *, h: float,
+                      kernel: str = "epanechnikov", interpret: bool = True):
+    """Fused primal update (7a') for a stacked node block.
+
+    X (m, n, p) compute dtype; y (m, n); B/P/neigh (m, p) fp32 (neigh is
+    the precomputed tau*(deg*B + (WB)) rows); rho/omega (m,); lam_vec (p,).
+    Returns B_new (m, p) fp32.
+    """
+    m, n, p = X.shape
+    cd = jnp.bfloat16 if X.dtype == jnp.bfloat16 else jnp.float32
+    sub = 16 if cd == jnp.bfloat16 else 8
+    m_pad, n_pad, p_pad = _rup(m, 8), _rup(n, sub), _rup(p, 128)
+    f32 = jnp.float32
+    Xp = jnp.pad(X.astype(cd), ((0, m_pad - m), (0, n_pad - n),
+                                (0, p_pad - p)))
+    yp = jnp.pad(y.astype(f32), ((0, m_pad - m), (0, n_pad - n)))
+    pad_mp = lambda a: jnp.pad(a.astype(f32), ((0, m_pad - m),
+                                               (0, p_pad - p)))
+    col = lambda v: jnp.pad(v.astype(f32), (0, m_pad - m))[:, None]
+    lam_row = jnp.broadcast_to(jnp.asarray(lam_vec, f32).reshape(-1), (p,))
+    lam_row = jnp.pad(lam_row, (0, p_pad - p))[None, :]
+
+    out = pl.pallas_call(
+        functools.partial(_block_update_kernel, h=h, kernel=kernel,
+                          n_real=n),
+        out_shape=jax.ShapeDtypeStruct((m_pad, p_pad), f32),
+        interpret=interpret,
+    )(Xp, yp, pad_mp(B), pad_mp(P), pad_mp(neigh), col(rho), col(omega),
+      lam_row)
+    return out[:m, :p]
+
+
+def megakernel_vmem_bytes(m: int, n: int, p: int, itemsize: int = 4) -> int:
+    """VMEM footprint of one megakernel residency (padded operands + the
+    fp32 state/intermediates).  See kernels/README.md for the budget math."""
+    sub = 16 if itemsize == 2 else 8
+    mp_, np_, pp_ = _rup(m, 8), _rup(n, sub), _rup(p, 128)
+    x_bytes = mp_ * np_ * pp_ * itemsize
+    state = 4 * mp_ * pp_ * 4            # B, P (in + out copies)
+    margins = 2 * mp_ * np_ * 4          # y + one live margin/weight buffer
+    adj = mp_ * mp_ * 4
+    vecs = (3 * mp_ + pp_) * 4
+    return x_bytes + state + margins + adj + vecs

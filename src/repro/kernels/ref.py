@@ -25,6 +25,44 @@ def decsvm_local_update(X: Array, y: Array, beta: Array, p_dual: Array,
                                h=h, kernel=kernel)
 
 
+def decsvm_round_block(X: Array, y: Array, B: Array, P: Array, W: Array,
+                       deg: Array, rho: Array, omega: Array, lam_vec,
+                       nact: int, *, tau: float, lam0: float, h: float,
+                       kernel: str = "epanechnikov",
+                       want_kkt: bool = False):
+    """Oracle for the round megakernel: ``nact`` dense Algorithm-1 rounds
+    (each one exactly ``solver.local_update`` + the dense W@B neighbour
+    sums) followed by the same stop statistic the kernel emits — the KKT
+    residual of ``solver.kkt_residual`` when ``want_kkt``, else the last
+    round's max|dB|.  Returns (B, P, stat), all fp32.
+    """
+    import types
+
+    X = X.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    B, P = B.astype(jnp.float32), P.astype(jnp.float32)
+    delta = jnp.asarray(jnp.inf, jnp.float32)
+    for _ in range(int(nact)):
+        neigh = tau * (deg[:, None] * B + W @ B)
+        B_new = jax.vmap(
+            lambda Xl, yl, bl, pl, nl, rl, wl: solver.local_update(
+                Xl, yl, bl, pl, nl, rl, wl, lam_vec, h=h, kernel=kernel)
+        )(X, y, B, P, neigh, rho, omega)
+        P = P + tau * (deg[:, None] * B_new - W @ B_new)
+        delta = jnp.max(jnp.abs(B_new - B))
+        B = B_new
+    if want_kkt:
+        cfg = types.SimpleNamespace(kernel=kernel, h=h, lam0=lam0)
+        prob = solver.Problem(X, y, deg, rho, omega, None)
+        lam_arr = jnp.asarray(lam_vec, jnp.float32).reshape(-1)
+        if lam_arr.shape[0] == 1:
+            stat = solver.kkt_residual(prob, cfg, B, lam_arr[0])
+        else:
+            stat = solver.kkt_residual(prob, cfg, B, 1.0, lam_arr)
+        return B, P, stat
+    return B, P, delta
+
+
 def mha(q: Array, k: Array, v: Array, *, causal: bool = True,
         window: int | None = None, sm_scale: float | None = None) -> Array:
     """Grouped-query attention oracle.

@@ -166,6 +166,129 @@ def test_csvm_update_lam_vector_matches_oracle():
                                atol=1e-5, rtol=1e-5)
 
 
+def _mega_inputs(m, n, p, dtype=jnp.float32, tau=1.0, lam0=0.0):
+    """Stacked node-block problem + ring topology for the round megakernel."""
+    from repro.core.graph import ring
+    X = jnp.asarray(RNG.standard_normal((m, n, p)), dtype)
+    y = jnp.asarray(RNG.choice([-1.0, 1.0], (m, n)), jnp.float32)
+    B = jnp.asarray(RNG.standard_normal((m, p)) * 0.1, jnp.float32)
+    P = jnp.asarray(RNG.standard_normal((m, p)) * 0.01, jnp.float32)
+    W = jnp.asarray(ring(m), jnp.float32)
+    deg = jnp.sum(W, axis=1)
+    rho = jnp.asarray(np.abs(RNG.standard_normal(m)) + 2.0, jnp.float32)
+    omega = 1.0 / (2.0 * tau * deg + rho + lam0)
+    return X, y, B, P, W, deg, rho, omega
+
+
+@pytest.mark.parametrize("m,n,p", [(4, 60, 21), (3, 33, 129), (8, 100, 50)])
+@pytest.mark.parametrize("want_kkt", [False, True])
+def test_megakernel_round_block_matches_oracle(m, n, p, want_kkt):
+    """Five fused rounds + in-kernel stop statistic vs the pure-jnp oracle
+    (which is itself literally solver.local_update + dense W sums)."""
+    X, y, B, P, W, deg, rho, omega = _mega_inputs(m, n, p)
+    args = (X, y, B, P, W, deg, rho, omega, 0.05, 5)
+    kw = dict(tau=1.0, lam0=0.0, h=0.25, num_rounds=5, want_kkt=want_kkt)
+    Bk, Pk, sk = ops.csvm_round_block(*args, **kw)
+    Bo, Po, so = ref.decsvm_round_block(*args, **{k: v for k, v in kw.items()
+                                                 if k != "num_rounds"})
+    np.testing.assert_allclose(np.asarray(Bk), np.asarray(Bo), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(Pk), np.asarray(Po), atol=1e-5)
+    np.testing.assert_allclose(float(sk), float(so), atol=1e-6)
+
+
+def test_megakernel_held_rounds():
+    """nact < num_rounds: rounds beyond nact must be exact no-ops (the
+    held-round semantics run_tol relies on near max_iter)."""
+    X, y, B, P, W, deg, rho, omega = _mega_inputs(4, 40, 24)
+    kw = dict(tau=1.0, lam0=0.0, h=0.25)
+    Bk, Pk, sk = ops.csvm_round_block(X, y, B, P, W, deg, rho, omega,
+                                      0.05, 3, num_rounds=6, **kw)
+    Bo, Po, so = ref.decsvm_round_block(X, y, B, P, W, deg, rho, omega,
+                                        0.05, 3, **kw)
+    np.testing.assert_allclose(np.asarray(Bk), np.asarray(Bo), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(Pk), np.asarray(Po), atol=1e-5)
+    np.testing.assert_allclose(float(sk), float(so), atol=1e-6)
+
+
+def test_megakernel_lam_vector_and_elastic_net():
+    """Per-coordinate l1 levels (LLA stage 2) and lam0 > 0 ride the fused
+    rounds and the in-kernel KKT epilogue."""
+    m, n, p = 4, 48, 40
+    X, y, B, P, W, deg, rho, omega = _mega_inputs(m, n, p, lam0=0.1)
+    lamv = jnp.asarray(RNG.uniform(0.01, 0.3, p), jnp.float32)
+    kw = dict(tau=1.0, lam0=0.1, h=0.25, want_kkt=True)
+    Bk, Pk, sk = ops.csvm_round_block(X, y, B, P, W, deg, rho, omega,
+                                      lamv, 4, num_rounds=4, **kw)
+    Bo, Po, so = ref.decsvm_round_block(X, y, B, P, W, deg, rho, omega,
+                                        lamv, 4, **kw)
+    np.testing.assert_allclose(np.asarray(Bk), np.asarray(Bo), atol=1e-5)
+    np.testing.assert_allclose(float(sk), float(so), atol=1e-6)
+
+
+def test_megakernel_bf16_mixed_precision_bound():
+    """bf16 X / fp32 accumulators: outputs stay fp32 and the recorded
+    parity bound vs the fp32 oracle holds (measured ~5e-4 over 5 rounds)."""
+    m, n, p = 4, 60, 32
+    X, y, B, P, W, deg, rho, omega = _mega_inputs(m, n, p)
+    kw = dict(tau=1.0, lam0=0.0, h=0.25)
+    Bk, Pk, sk = ops.csvm_round_block(X.astype(jnp.bfloat16), y, B, P, W,
+                                      deg, rho, omega, 0.05, 5,
+                                      num_rounds=5, want_kkt=True, **kw)
+    Bo, Po, so = ref.decsvm_round_block(X, y, B, P, W, deg, rho, omega,
+                                        0.05, 5, want_kkt=True, **kw)
+    assert Bk.dtype == jnp.float32 and Pk.dtype == jnp.float32
+    assert sk.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(Bk), np.asarray(Bo), atol=5e-2)
+    np.testing.assert_allclose(np.asarray(Pk), np.asarray(Po), atol=5e-2)
+    np.testing.assert_allclose(float(sk), float(so), atol=5e-2)
+
+
+def test_megakernel_block_update_matches_oracle():
+    """The single-round block kernel (neighbour term as an operand, for
+    sharded engines whose collectives live outside the kernel)."""
+    from repro.core import solver
+    m, n, p = 4, 52, 36
+    X, y, B, P, W, deg, rho, omega = _mega_inputs(m, n, p)
+    neigh = 1.0 * (deg[:, None] * B + W @ B)
+    got = ops.csvm_block_update(X, y, B, P, neigh, rho, omega, 0.05,
+                                h=0.25)
+    want = jax.vmap(lambda Xl, yl, bl, pl, nl, rl, wl: solver.local_update(
+        Xl, yl, bl, pl, nl, rl, wl, 0.05, h=0.25, kernel="epanechnikov")
+    )(X, y, B, P, neigh, rho, omega)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_megakernel_vmap_batches_cleanly():
+    """vmap over a batch of problems (the path engine's axis) — including
+    the traced nact scalar — matches per-problem kernel calls."""
+    m, n, p = 3, 30, 16
+    X, y, B, P, W, deg, rho, omega = _mega_inputs(m, n, p)
+    Xs = jnp.stack([X, X * 1.1])
+    nacts = jnp.asarray([3, 2], jnp.int32)
+    kw = dict(tau=1.0, lam0=0.0, h=0.25, num_rounds=3, want_kkt=True)
+    Bb, Pb, sb = jax.vmap(
+        lambda Xb, nb: ops.csvm_round_block(Xb, y, B, P, W, deg, rho,
+                                            omega, 0.05, nb, **kw)
+    )(Xs, nacts)
+    for i in range(2):
+        Bi, Pi, si = ops.csvm_round_block(Xs[i], y, B, P, W, deg, rho,
+                                          omega, 0.05, nacts[i], **kw)
+        np.testing.assert_allclose(np.asarray(Bb[i]), np.asarray(Bi),
+                                   atol=1e-6)
+        np.testing.assert_allclose(float(sb[i]), float(si), atol=1e-6)
+
+
+def test_megakernel_vmem_guard():
+    """The VMEM residency guard admits the bench shape on-chip budgets and
+    rejects problems whose whole-state footprint cannot fit."""
+    assert ops.megakernel_supported(8, 100, 50, interpret=False)
+    assert not ops.megakernel_supported(64, 4096, 4096, interpret=False)
+    # bf16 X halves the dominant (m, n, p) term
+    from repro.kernels.csvm_update import megakernel_vmem_bytes
+    assert (megakernel_vmem_bytes(8, 100, 50, 2)
+            < megakernel_vmem_bytes(8, 100, 50, 4))
+
+
 def test_admm_pallas_with_lam_weights_matches_dense():
     """LLA stage 2 (non-uniform lam_weights) no longer silently falls back
     to the dense path: the Pallas route agrees with it."""
