@@ -114,12 +114,15 @@ def run() -> dict:
             steady["megakernel"] / steady["megakernel_bf16"],
         "max_abs_dev_vs_jnp": dev,
         "roofline": _roofline(),
+        # the bf16 parity bound is a recorded measurement, not a gate —
+        # criteria entries are strictly pass/fail bools (bench_schema)
+        "bf16_parity_bound": dev["megakernel_bf16"],
         "criteria": {
             "megakernel_speedup_vs_pallas_ge_1.5":
                 bool(speedup >= 1.5),
             "fp32_parity_vs_jnp_le_1e-5":
                 bool(dev["megakernel"] <= 1e-5),
-            "bf16_parity_bound_recorded": dev["megakernel_bf16"],
+            "bf16_parity_le_1e-2": bool(dev["megakernel_bf16"] <= 1e-2),
         },
     }
     OUT.write_text(json.dumps(result, indent=2) + "\n")

@@ -15,6 +15,31 @@ def _run_one(name: str) -> None:
     import importlib
     mod = importlib.import_module(f"benchmarks.bench_{name}")
     mod.run()
+    _validate_artifact(name)
+
+
+def _validate_artifact(name: str) -> None:
+    """Validate the bench's BENCH_<name>.json (if it emits one) against
+    the shared schema, so a bench refactor cannot silently drop the
+    fields the acceptance gates read."""
+    from pathlib import Path
+
+    root = Path(__file__).resolve().parent.parent
+    artifact = root / f"BENCH_{name}.json"
+    if not artifact.exists():
+        return                       # CSV-only bench
+    sys.path.insert(0, str(root))    # tools/ may not be importable yet
+    try:
+        from tools.declint.bench_schema import validate_file
+    finally:
+        sys.path.pop(0)
+    problems = validate_file(artifact)
+    if problems:
+        for p in problems:
+            print(f"{artifact.name}: {p}", file=sys.stderr)
+        raise SystemExit(f"{artifact.name} violates the BENCH schema "
+                         f"(tools/declint/bench_schema.py)")
+    print(f"# {artifact.name}: schema ok", file=sys.stderr)
 
 
 def main() -> None:

@@ -198,6 +198,15 @@ def _lamw(lam_weights, p, dtype):
             else jnp.asarray(lam_weights, dtype))
 
 
+@functools.partial(jax.jit, static_argnames=("h", "kernel", "safety"))
+def _fold_rhos(X, folds, h, kernel, safety):
+    """Per-fold rho vectors, (k, m).  Module-level jit: the old inline
+    ``jax.jit(jax.vmap(...))`` built a fresh jit object (fresh cache) on
+    every CV-mode call, recompiling per fit."""
+    return jax.vmap(
+        lambda mk: solver.compute_rho(X, h, kernel, safety, mask=mk))(folds)
+
+
 def decsvm_fit_sharded(X: Array, y: Array, W: np.ndarray, cfg: ADMMConfig,
                        mesh: Optional[Mesh] = None,
                        schedule: str = "gather",
@@ -481,10 +490,8 @@ def decsvm_path_mesh(X: Array, y: Array, W: np.ndarray, lams,
         cell_masks = jnp.asarray(np.concatenate(
             [ones] + [np.broadcast_to(f, (L, m, n)) for f in folds]), X.dtype)
         cell_lams = np.concatenate([lams] * (1 + cv_folds))
-        fold_rho = jax.jit(jax.vmap(
-            lambda mk: solver.compute_rho(X, cfg.h, cfg.kernel,
-                                          cfg.rho_safety, mask=mk)))(
-            jnp.asarray(folds, X.dtype))                      # (k, m)
+        fold_rho = _fold_rhos(X, jnp.asarray(folds, X.dtype), cfg.h,
+                              cfg.kernel, cfg.rho_safety)     # (k, m)
         cell_rho = jnp.concatenate(
             [jnp.broadcast_to(rho_full, (L, m))]
             + [jnp.broadcast_to(r, (L, m)) for r in fold_rho])

@@ -31,6 +31,7 @@ Update (per node l, with deg_l = |N(l)|):
 """
 from __future__ import annotations
 
+import functools
 from typing import Callable, NamedTuple, Optional
 
 import jax
@@ -75,12 +76,19 @@ def power_iteration_lmax(X: Array, iters: int = 50) -> Array:
                      jnp.vdot(v, w) / jnp.where(vv > 0.0, vv, 1.0), 0.0)
 
 
+@functools.partial(jax.jit, static_argnames=("h", "kernel", "safety"))
 def compute_rho(X: Array, h: float, kernel: str, safety: float = 1.05,
                 mask: Optional[Array] = None) -> Array:
     """rho_l >= c_h * Lmax(X_l'X_l/n_l) per node.  X: (m, n, p).
 
     With a sample ``mask`` (m, n), masked rows are zeroed and n_l is the
     per-node mask sum (the uneven-n extension of Section 2.1).
+
+    Jitted (h/kernel/safety static): the eager vmap-of-scan dispatch used
+    to miss the executable cache and recompile on every host-side call —
+    the sharded/mesh drivers paid one XLA compile per fit even when the
+    lru-cached program builders all hit (caught by the compile-guard
+    trace contract in tests/test_solver.py).
     """
     c_h = losses.get_kernel(kernel).lipschitz(h)
     if mask is None:

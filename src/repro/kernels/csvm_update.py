@@ -73,6 +73,7 @@ def _grad_update_kernel(x_ref, w_ref, beta_ref, pdual_ref, neigh_ref,
         z = rho * beta_ref[...] - out_ref[...] - pdual_ref[...] + neigh_ref[...]
         zo = omega * z
         t = lam_ref[...] * omega           # (bp, 1) per-coordinate level
+        # declint: disable=R1 fused in-kernel prox, parity-tested vs solver.local_update
         out_ref[...] = jnp.sign(zo) * jnp.maximum(jnp.abs(zo) - t, 0.0)
 
 
@@ -217,6 +218,7 @@ def _round_megakernel(x_ref, y_ref, wadj_ref, deg_ref, rho_ref, omega_ref,
         z = rho * B - grad_all(B) - P + tau * (deg * B + WB)
         zo = omega * z
         thr = lam * omega
+        # declint: disable=R1 fused in-kernel prox, parity-tested vs solver.local_update
         Bn = jnp.sign(zo) * jnp.maximum(jnp.abs(zo) - thr, 0.0)
         WBn = jnp.dot(A, Bn, preferred_element_type=jnp.float32)
         Pn = P + tau * (deg * Bn - WBn)
@@ -245,6 +247,7 @@ def _round_megakernel(x_ref, y_ref, wadj_ref, deg_ref, rho_ref, omega_ref,
                     preferred_element_type=jnp.float32) * (inv_n / m_real)
         g = g + lam0 * bb
         v = bb - g
+        # declint: disable=R1 in-pass KKT prox epilogue, matches solver.kkt_residual
         prox = jnp.sign(v) * jnp.maximum(jnp.abs(v) - lam, 0.0)
         stat = jnp.max(jnp.abs(bb - prox))
         rows = jax.lax.broadcasted_iota(jnp.int32, (Mp, 1), 0)
@@ -323,6 +326,7 @@ def _block_update_kernel(x_ref, y_ref, b_ref, p_ref, neigh_ref, rho_ref,
     z = rho_ref[...] * B - grad - p_ref[...] + neigh_ref[...]
     zo = omega_ref[...] * z
     thr = lam_ref[...] * omega_ref[...]
+    # declint: disable=R1 fused in-kernel prox, parity-tested vs solver.local_update
     out_ref[...] = jnp.sign(zo) * jnp.maximum(jnp.abs(zo) - thr, 0.0)
 
 
@@ -370,4 +374,5 @@ def megakernel_vmem_bytes(m: int, n: int, p: int, itemsize: int = 4) -> int:
     margins = 2 * mp_ * np_ * 4          # y + one live margin/weight buffer
     adj = mp_ * mp_ * 4
     vecs = (3 * mp_ + pp_) * 4
-    return x_bytes + state + margins + adj + vecs
+    scalars = 2 * 4                      # nact round count + stat output, (1,1)
+    return x_bytes + state + margins + adj + vecs + scalars

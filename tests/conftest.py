@@ -7,6 +7,10 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import numpy as np
 import pytest
 
+# Runtime trace-contract harness: the `compile_guard` fixture counts XLA
+# backend compilations so tests can assert compile budgets (declint suite).
+pytest_plugins = ("tools.declint.compile_guard",)
+
 
 @pytest.fixture(scope="session")
 def rng():

@@ -264,6 +264,37 @@ def test_zero_margin_ties_predict_positive(sims):
                             y.ravel()) == pytest.approx(pos_rate)
 
 
+@pytest.mark.serving_smoke
+def test_full_bucket_of_16_compiles_one_program(sims, compile_guard):
+    """Trace contract (declint compile guard): a full 16-request
+    same-shape bucket resolves through exactly ONE compiled program.
+    The first bucket absorbs the cold compile; a second full bucket of
+    the same key must add ZERO backend compilations — every request
+    rides the one cached problem-batched path program, one program
+    execution per bucket."""
+    _, probs, lams = sims
+    acfg = ADMMConfig(lam=0.0, max_iter=MAX_ITER)
+    srv = DecsvmFitServer(max_batch=16)
+
+    def bucket(base):
+        for i in range(16):
+            X, y, W = probs[i % NPROB]
+            srv.submit(FitRequest(rid=base + i, X=X, y=y, W=W, cfg=acfg,
+                                  lams=lams, mode="batched"))
+        return srv.run()
+
+    done = bucket(0)
+    assert sorted(done) == list(range(16))
+    assert [size for _, size in srv.bucket_log] == [16]
+    assert all(done[i].batch_size == 16 for i in range(16))
+    with compile_guard.expect(0, what="second same-shape 16-request bucket"):
+        done2 = bucket(100)
+    assert sorted(done2) == list(range(100, 116))
+    assert [size for _, size in srv.bucket_log] == [16, 16]
+    for i in range(16):        # same data -> the cached program reproduces it
+        np.testing.assert_allclose(done2[100 + i].B, done[i].B, atol=1e-6)
+
+
 def test_fit_many_traced_lambda_matches_static(sims):
     """decsvm_fit_many with traced per-problem lambdas reproduces
     per-problem decsvm_fit at static cfg.lam."""

@@ -305,3 +305,68 @@ def test_admm_pallas_with_lam_weights_matches_dense():
                         lam_weights=w)
     np.testing.assert_allclose(np.asarray(pallas), np.asarray(dense),
                                atol=1e-5, rtol=1e-5)
+
+
+def _pallas_eqn_bytes(fn, *args):
+    """Shape-walk the pallas_call equation inside ``fn``'s jaxpr: total
+    bytes of its operand + output avals (recursing through pjit wrappers)."""
+    jaxpr = jax.make_jaxpr(fn)(*args)
+
+    def sub_jaxprs(val):
+        vals = val if isinstance(val, (list, tuple)) else [val]
+        for v in vals:
+            name = type(v).__name__
+            if name == "ClosedJaxpr":
+                yield v.jaxpr
+            elif name == "Jaxpr":
+                yield v
+
+    def find(jx):
+        for eqn in jx.eqns:
+            if eqn.primitive.name == "pallas_call":
+                yield eqn
+            for val in eqn.params.values():
+                for sub in sub_jaxprs(val):
+                    yield from find(sub)
+
+    eqns = list(find(jaxpr.jaxpr))
+    assert len(eqns) == 1, f"expected one pallas_call, found {len(eqns)}"
+    (eqn,) = eqns
+    return sum(v.aval.size * v.aval.dtype.itemsize
+               for v in list(eqn.invars) + list(eqn.outvars))
+
+
+@pytest.mark.parametrize("m,n,p,dtype", [(4, 64, 128, jnp.float32),
+                                         (5, 37, 20, jnp.float32),
+                                         (4, 64, 128, jnp.bfloat16),
+                                         (7, 50, 130, jnp.bfloat16)])
+def test_megakernel_vmem_accounting_matches_pallas_operands(m, n, p, dtype):
+    """VMEM accounting regression (declint satellite): the
+    ``megakernel_vmem_bytes`` budget formula must equal the shape-walked
+    bytes of the actual ``pallas_call`` — every padded operand and output
+    aval, plus the one live (M, N) margin/weight intermediate the kernel
+    keeps between its two MXU dots.  A drift here means ``ops.py``'s VMEM
+    guard is admitting (or refusing) shapes against a stale footprint;
+    the old formula dropped the (1, 1) nact and stat buffers."""
+    from repro.kernels.csvm_update import _rup, megakernel_vmem_bytes
+
+    X = jnp.zeros((m, n, p), dtype)
+    y = jnp.zeros((m, n), jnp.float32)
+    B = jnp.zeros((m, p), jnp.float32)
+    P = jnp.zeros((m, p), jnp.float32)
+    W = jnp.zeros((m, m), jnp.float32)
+    vec_m = jnp.zeros((m,), jnp.float32)
+    lam = jnp.zeros((p,), jnp.float32)
+
+    def run(X, y, B, P, W, deg, rho, omega, lam, nact):
+        return ops.csvm_round_block(X, y, B, P, W, deg, rho, omega, lam,
+                                    nact, tau=0.5, lam0=1e-4, h=0.5,
+                                    num_rounds=2, want_kkt=True)
+
+    operand_bytes = _pallas_eqn_bytes(run, X, y, B, P, W, vec_m, vec_m,
+                                      vec_m, lam, 2)
+    itemsize = jnp.dtype(dtype).itemsize
+    sub = 16 if itemsize == 2 else 8
+    live_margin = _rup(m, 8) * _rup(n, sub) * 4    # in-kernel intermediate
+    assert megakernel_vmem_bytes(m, n, p, itemsize) == \
+        operand_bytes + live_margin

@@ -340,3 +340,27 @@ def test_kfold_masks_partition():
     np.testing.assert_array_equal(val.sum(axis=0), np.ones((3, 20)))
     # every fold keeps a majority of each node's rows for training
     assert masks.sum(axis=2).min() >= 10
+
+
+def test_driver_compile_budget(fixture, compile_guard):
+    """Trace contract (declint compile guard): the 13-driver parity suite
+    stays within its recorded compile budget.  The first pass absorbs any
+    cold compiles (34 measured on the pinned jax; internal helper jits
+    make the exact count version-dependent, so the recorded ceiling has
+    headroom), and a second identical pass must hit the program cache
+    everywhere — zero new XLA compilations.  Regression target: the
+    sharded/mesh drivers used to recompile every call because the eager
+    ``solver.compute_rho`` dispatch (and a fresh ``jax.jit`` built inside
+    ``decsvm_path_mesh``'s CV branch) missed the cache."""
+    COLD_BUDGET = 60
+    drivers = _drivers(fixture)
+    snap = compile_guard.snapshot()
+    for fn in drivers.values():
+        np.asarray(fn())
+    cold = compile_guard.new_since(snap)
+    assert cold <= COLD_BUDGET, (
+        f"cold compile budget exceeded: {cold} > {COLD_BUDGET} — a driver "
+        f"grew extra programs; re-measure and justify before raising this")
+    with compile_guard.expect(0, what="second pass over all 13 drivers"):
+        for fn in drivers.values():
+            np.asarray(fn())

@@ -1,0 +1,70 @@
+"""declint: repo-specific static analysis for the deCSVM solver/kernel
+stack, plus the runtime trace-contract harness (compile_guard) and the
+BENCH artifact schema (bench_schema).
+
+Run locally::
+
+    python -m tools.declint src
+
+Rules, motivations, and waiver syntax: ``tools/declint/README.md``.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import List, Optional, Sequence, Set
+
+from tools.declint.core import (EXEMPT, ModuleInfo, Violation, apply_waivers,
+                                check_exempt_list, is_exempt, iter_py_files)
+from tools.declint.rules import MESH_PATH, R6MeshAxes, default_rules
+
+__all__ = ["EXEMPT", "Violation", "lint_paths", "lint_source",
+           "load_allowed_axes"]
+
+
+def load_allowed_axes(root: Path) -> Optional[Set[str]]:
+    """Axis-name vocabulary from make_mesh calls in launch/mesh.py."""
+    mesh_file = root / MESH_PATH
+    if not mesh_file.exists():
+        return None
+    mod = ModuleInfo(MESH_PATH, mesh_file.read_text())
+    return R6MeshAxes.collect_mesh_axes(mod)
+
+
+def lint_source(source: str, path: str = "snippet.py",
+                allowed_axes: Optional[Set[str]] = None) -> List[Violation]:
+    """Lint one source string (the unit-test entry point).  ``path`` is the
+    virtual repo-relative path the path-scoped rules (R1/R2/R6) see."""
+    mod = ModuleInfo(path, source)
+    found: List[Violation] = []
+    for rule in default_rules(allowed_axes):
+        found.extend(rule.check(mod))
+    return sorted(apply_waivers(mod, found), key=lambda v: (v.line, v.rule))
+
+
+def lint_paths(roots: Sequence[Path]) -> List[Violation]:
+    """Lint every non-exempt .py file under the given roots."""
+    out: List[Violation] = []
+    for root in roots:
+        root = Path(root)
+        if root.is_file():
+            files, base = [root], root.parent
+        else:
+            files, base = list(iter_py_files(root)), root
+        axes = load_allowed_axes(base)
+        rules = default_rules(axes)
+        if (base / "repro").exists():
+            for stale in check_exempt_list(base):
+                out.append(Violation(
+                    str(base), 0, "W0",
+                    f"EXEMPT entry {stale!r} no longer exists — prune it "
+                    "from tools/declint/core.py"))
+        for f in files:
+            rel = f.relative_to(base).as_posix()
+            if is_exempt(rel):
+                continue
+            mod = ModuleInfo(rel, f.read_text())
+            found: List[Violation] = []
+            for rule in rules:
+                found.extend(rule.check(mod))
+            out.extend(apply_waivers(mod, found))
+    return sorted(out, key=lambda v: (v.path, v.line, v.rule))

@@ -1,0 +1,38 @@
+"""CLI: ``python -m tools.declint src`` — exit 0 when clean, 1 otherwise."""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from tools.declint import lint_paths
+from tools.declint.rules import default_rules
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.declint",
+        description="Repo-specific static analysis for the deCSVM "
+                    "solver/kernel stack (see tools/declint/README.md).")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files or directories to lint (default: src)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalogue and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in default_rules():
+            print(f"{rule.id}: {rule.doc}")
+        return 0
+
+    violations = lint_paths([Path(p) for p in args.paths])
+    for v in violations:
+        print(v)
+    n = len(violations)
+    print(f"declint: {n} violation{'s' if n != 1 else ''}"
+          if n else "declint: clean", file=sys.stderr)
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,285 @@
+"""declint core: file discovery, waiver parsing, shared AST analysis.
+
+The linter is stdlib-only (``ast`` + ``pathlib``); rules live in
+``tools.declint.rules`` and consume a :class:`ModuleInfo` built here once
+per file.  See ``tools/declint/README.md`` for every rule, the commit that
+motivated it, and the waiver syntax.
+
+Waivers
+-------
+A violation is suppressed by a waiver comment on the violating line or the
+line directly above it::
+
+    B = jnp.sign(z) * jnp.maximum(jnp.abs(z) - t, 0.0)  # declint: disable=R1 fused in-kernel prox
+
+The free text after the rule list is the *reason* and is mandatory: a
+waiver without a reason is itself a lint error (rule W0).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+# The LM seed stack rode in with the growth seed and is still *referenced*
+# (serving/engine.py serves these models; tier-1 tests cover them), so it
+# cannot be deleted — but it is not part of the deCSVM solver/kernel stack
+# whose invariants declint encodes, and linting it would force every rule
+# to grow LM-specific escape hatches.  Quarantined here instead, each entry
+# with its reason; ``python -m tools.declint src`` errors if an entry stops
+# existing (keeps the list honest as modules are pruned).
+EXEMPT: Dict[str, str] = {
+    "repro/models/": "LM seed stack (referenced by serving.engine + tests)",
+    "repro/configs/": "LM model configs for the seed stack",
+    "repro/kernels/flash_attention.py": "LM-side kernel (tests only)",
+    "repro/kernels/ssd_scan.py": "LM-side kernel (tests only)",
+    "repro/launch/train.py": "LM training loop (seed)",
+    "repro/launch/serve.py": "LM serving loop (seed)",
+    "repro/launch/cli.py": "LM CLI entry point (seed)",
+    "repro/launch/dryrun.py": "LM dry-run harness (seed)",
+    "repro/launch/sharding.py": "LM parameter sharding (seed)",
+    "repro/checkpoint/": "LM checkpointing (seed)",
+    "repro/data/packing.py": "LM sequence packing (seed)",
+    "repro/optim/adamw.py": "LM optimizer (seed)",
+    "repro/optim/schedule.py": "LM LR schedule (seed)",
+}
+
+_WAIVER_RE = re.compile(
+    r"#\s*declint:\s*disable=([A-Za-z]\d+(?:\s*,\s*[A-Za-z]\d+)*)\s*(.*)$")
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    path: str          # repo-relative posix path
+    line: int          # 1-indexed
+    rule: str          # "R1".."R8", "W0"
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule}: {self.message}"
+
+
+@dataclasses.dataclass
+class Waiver:
+    line: int
+    rules: Tuple[str, ...]
+    reason: str
+
+
+def parse_waivers(lines: Sequence[str]) -> List[Waiver]:
+    out = []
+    for i, text in enumerate(lines, start=1):
+        m = _WAIVER_RE.search(text)
+        if m:
+            rules = tuple(r.strip() for r in m.group(1).split(","))
+            out.append(Waiver(i, rules, m.group(2).strip()))
+    return out
+
+
+_SAFE_ATTRS = {"shape", "dtype", "ndim", "size"}
+_LAX_BODY_CALLEES = {"scan", "while_loop", "fori_loop", "cond", "switch"}
+_COLLECTIVES = {"psum", "pmean", "pmax", "pmin", "ppermute", "pshuffle",
+                "all_gather", "all_to_all", "axis_index", "pvary"}
+
+
+class ModuleInfo:
+    """One parsed file plus the shared analyses every rule reads.
+
+    - ``kernel_bodies``: Pallas kernel body functions — any function with a
+      ``*_ref`` parameter, or passed (directly or through
+      ``functools.partial``) as the first argument of a ``pallas_call``.
+    - ``lax_bodies``: functions handed to ``lax.scan`` / ``while_loop`` /
+      ``fori_loop`` / ``cond`` / ``switch`` — their positional parameters
+      are traced values.
+    - ``shard_map_fns``: functions handed to anything named ``*shard_map*``.
+    - ``traced_fns``: the transitive traced scope — jit-decorated functions
+      and everything lexically nested inside any traced function, plus the
+      three sets above.
+    """
+
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+        self.waivers = parse_waivers(self.lines)
+        self.parents: Dict[ast.AST, ast.AST] = {}
+        for node in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(node):
+                self.parents[child] = node
+        self._funcs = [n for n in ast.walk(self.tree)
+                       if isinstance(n, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef, ast.Lambda))]
+        self.kernel_bodies = self._find_kernel_bodies()
+        self.lax_bodies = self._find_called_bodies(_LAX_BODY_CALLEES)
+        self.shard_map_fns = self._find_shard_map_fns()
+        self.traced_fns = self._find_traced_fns()
+
+    # -- generic helpers -----------------------------------------------------
+
+    def segment(self, node: ast.AST) -> str:
+        return ast.get_source_segment(self.source, node) or ""
+
+    def call_name(self, call: ast.Call) -> str:
+        """Trailing name of the callee: ``jax.lax.scan`` -> ``scan``."""
+        f = call.func
+        if isinstance(f, ast.Attribute):
+            return f.attr
+        if isinstance(f, ast.Name):
+            return f.id
+        return ""
+
+    def func_params(self, fn) -> List[str]:
+        a = fn.args
+        return [x.arg for x in a.posonlyargs + a.args + a.kwonlyargs]
+
+    def positional_params(self, fn) -> List[str]:
+        a = fn.args
+        return [x.arg for x in a.posonlyargs + a.args]
+
+    def enclosing_function(self, node: ast.AST):
+        cur = self.parents.get(node)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.Lambda)):
+                return cur
+            cur = self.parents.get(cur)
+        return None
+
+    def _resolve_func_arg(self, arg: ast.AST, scope_call: ast.Call):
+        """Map a callable argument expression to function node(s).
+
+        Handles: a bare Name resolved to a sibling/enclosing FunctionDef, an
+        inline Lambda, and ``functools.partial(f, ...)`` around either.
+        """
+        if isinstance(arg, ast.Lambda):
+            return [arg]
+        if isinstance(arg, ast.Call) and self.call_name(arg) == "partial":
+            if arg.args:
+                return self._resolve_func_arg(arg.args[0], scope_call)
+            return []
+        if isinstance(arg, ast.Name):
+            return [f for f in self._funcs
+                    if isinstance(f, (ast.FunctionDef, ast.AsyncFunctionDef))
+                    and f.name == arg.id]
+        return []
+
+    # -- analyses ------------------------------------------------------------
+
+    def _find_kernel_bodies(self) -> Set[ast.AST]:
+        out: Set[ast.AST] = set()
+        for fn in self._funcs:
+            if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if any(p.endswith("_ref") for p in self.func_params(fn)):
+                    out.add(fn)
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Call) \
+                    and self.call_name(node) == "pallas_call":
+                # pallas_call(kernel_fn, ...) — kernel fn is the first arg
+                for arg in node.args[:1]:
+                    out.update(self._resolve_func_arg(arg, node))
+        return out
+
+    def _find_called_bodies(self, callees: Set[str]) -> Set[ast.AST]:
+        out: Set[ast.AST] = set()
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Call) and self.call_name(node) in callees:
+                for arg in node.args:
+                    out.update(self._resolve_func_arg(arg, node))
+        return out
+
+    def _find_shard_map_fns(self) -> Set[ast.AST]:
+        out: Set[ast.AST] = set()
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Call) \
+                    and "shard_map" in self.call_name(node):
+                for arg in node.args[:1]:
+                    out.update(self._resolve_func_arg(arg, node))
+        return out
+
+    def _is_jit_decorator(self, dec: ast.AST) -> bool:
+        seg = self.segment(dec)
+        return "jit" in seg.split("(")[0] or "partial(jax.jit" in seg \
+            or "partial(jit" in seg
+
+    def _find_traced_fns(self) -> Set[ast.AST]:
+        roots: Set[ast.AST] = set()
+        for fn in self._funcs:
+            if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if any(self._is_jit_decorator(d) for d in fn.decorator_list):
+                    roots.add(fn)
+        # functions passed to vmap/pmap are traced too
+        roots |= self._find_called_bodies({"vmap", "pmap"})
+        roots |= self.kernel_bodies | self.lax_bodies | self.shard_map_fns
+        # close over lexical nesting: everything inside a traced fn is traced
+        out = set(roots)
+        changed = True
+        while changed:
+            changed = False
+            for fn in self._funcs:
+                if fn in out:
+                    continue
+                enc = self.enclosing_function(fn)
+                if enc is not None and enc in out:
+                    out.add(fn)
+                    changed = True
+        return out
+
+    def in_traced_scope(self, node: ast.AST) -> bool:
+        fn = self.enclosing_function(node)
+        while fn is not None:
+            if fn in self.traced_fns:
+                return True
+            fn = self.enclosing_function(fn)
+        return False
+
+
+class Rule:
+    """Base class; subclasses set ``id``/``doc`` and implement ``check``."""
+    id: str = "R?"
+    doc: str = ""
+
+    def check(self, mod: ModuleInfo) -> Iterable[Violation]:  # pragma: no cover
+        raise NotImplementedError
+
+
+def apply_waivers(mod: ModuleInfo,
+                  violations: List[Violation]) -> List[Violation]:
+    """Drop violations covered by a waiver on the same or previous line;
+    emit W0 for any waiver missing its reason."""
+    out: List[Violation] = []
+    for v in violations:
+        waived = any(v.rule in w.rules and w.line in (v.line, v.line - 1)
+                     and w.reason for w in mod.waivers)
+        if not waived:
+            out.append(v)
+    for w in mod.waivers:
+        if not w.reason:
+            out.append(Violation(
+                mod.path, w.line, "W0",
+                "waiver without a reason — write `# declint: "
+                "disable=<rules> <why this is an intentional exception>`"))
+    return out
+
+
+def iter_py_files(root: Path) -> Iterable[Path]:
+    yield from sorted(root.rglob("*.py"))
+
+
+def is_exempt(rel: str) -> Optional[str]:
+    for prefix, reason in EXEMPT.items():
+        if rel == prefix or rel.startswith(prefix):
+            return reason
+    return None
+
+
+def check_exempt_list(root: Path) -> List[str]:
+    """Every EXEMPT entry must still exist under ``root`` — a stale entry
+    means the quarantine list has drifted from the tree."""
+    stale = []
+    for prefix in EXEMPT:
+        if not (root / prefix).exists():
+            stale.append(prefix)
+    return stale

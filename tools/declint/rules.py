@@ -1,0 +1,478 @@
+"""declint rules R1..R8 — the solver/kernel invariants PRs 4-6 left to
+reviewer memory, now machine-checked.  Each rule's motivating PR/commit is
+documented in ``tools/declint/README.md``; each has a positive and a
+negative unit test in ``tests/test_declint.py``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional, Sequence, Set
+
+from tools.declint.core import (_COLLECTIVES, _SAFE_ATTRS, ModuleInfo, Rule,
+                                Violation)
+
+SOLVER_PATH = "repro/core/solver.py"
+MESH_PATH = "repro/launch/mesh.py"
+
+
+def _is_kernels_file(path: str) -> bool:
+    return "/kernels/" in f"/{path}"
+
+
+def _contains_name(node: ast.AST, name: str) -> bool:
+    return any(isinstance(n, ast.Name) and n.id == name
+               for n in ast.walk(node))
+
+
+class R1ProxHome(Rule):
+    """update (7a')'s prox lives only in ``core/solver.py``.
+
+    Flags, outside solver.py: (a) re-definitions of ``soft_threshold``;
+    (b) the update application ``soft_threshold(omega * z, ...)``; (c) the
+    inline prox pattern ``sign(v) * maximum(abs(v) - t, 0)`` (re-deriving
+    the math instead of calling the one home).  Pallas kernel bodies
+    cannot call back into jnp-level solver code, so their fused inline
+    prox carries a waiver.
+    """
+    id = "R1"
+    doc = "soft-threshold update math must live only in core/solver.py"
+
+    def check(self, mod: ModuleInfo) -> Iterable[Violation]:
+        if mod.path.endswith(SOLVER_PATH):
+            return []
+        out: List[Violation] = []
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node.name == "soft_threshold":
+                out.append(Violation(
+                    mod.path, node.lineno, self.id,
+                    "soft_threshold re-defined outside core/solver.py — "
+                    "import it from repro.core.solver instead"))
+            if isinstance(node, ast.Call) \
+                    and mod.call_name(node) == "soft_threshold" \
+                    and node.args and _contains_name(node.args[0], "omega"):
+                out.append(Violation(
+                    mod.path, node.lineno, self.id,
+                    "the (7a') update soft_threshold(omega * z, ...) may "
+                    "only be applied in core/solver.py (local_update)"))
+            if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Mult) \
+                    and self._is_inline_prox(mod, node):
+                out.append(Violation(
+                    mod.path, node.lineno, self.id,
+                    "inline soft-threshold sign(v)*maximum(abs(v)-t, 0) "
+                    "outside core/solver.py — call solver.soft_threshold "
+                    "(kernel bodies that must fuse it inline take a "
+                    "waiver)"))
+        return out
+
+    @staticmethod
+    def _call_tail(node: ast.AST) -> str:
+        if isinstance(node, ast.Call):
+            f = node.func
+            if isinstance(f, ast.Attribute):
+                return f.attr
+            if isinstance(f, ast.Name):
+                return f.id
+        return ""
+
+    def _is_inline_prox(self, mod: ModuleInfo, node: ast.BinOp) -> bool:
+        sides = (node.left, node.right)
+        has_sign = any(self._call_tail(s) == "sign" for s in sides)
+
+        def is_shrink(s):
+            if self._call_tail(s) not in ("maximum", "max"):
+                return False
+            return any(self._call_tail(a) == "abs"
+                       for sub in ast.walk(s)
+                       for a in ([sub.left, sub.right]
+                                 if isinstance(sub, ast.BinOp)
+                                 and isinstance(sub.op, ast.Sub) else []))
+
+        return has_sign and any(is_shrink(s) for s in sides)
+
+
+class R2KernelDotPrecision(Rule):
+    """Every MXU dot inside a Pallas kernel body must pin its accumulator.
+
+    In ``kernels/*.py`` kernel bodies (where operands may be bf16 under the
+    mixed-precision mode), ``jnp.dot`` / ``lax.dot_general`` without
+    ``preferred_element_type`` and any bare ``@`` matmul (which cannot
+    carry it) are flagged — a bf16 operand would otherwise accumulate in
+    bf16 and break the fp32-accumulator discipline of kernels/README.md.
+    """
+    id = "R2"
+    doc = "kernel-body dots must set preferred_element_type"
+
+    _DOTS = {"dot", "dot_general", "einsum", "matmul"}
+
+    def check(self, mod: ModuleInfo) -> Iterable[Violation]:
+        if not _is_kernels_file(mod.path):
+            return []
+        out: List[Violation] = []
+        for body in mod.kernel_bodies:
+            for node in ast.walk(body):
+                if isinstance(node, ast.Call) \
+                        and mod.call_name(node) in self._DOTS:
+                    if not any(kw.arg == "preferred_element_type"
+                               for kw in node.keywords):
+                        out.append(Violation(
+                            mod.path, node.lineno, self.id,
+                            f"{mod.call_name(node)} in a kernel body "
+                            "without preferred_element_type= — a bf16 "
+                            "operand would accumulate in bf16"))
+                if isinstance(node, ast.BinOp) \
+                        and isinstance(node.op, ast.MatMult):
+                    out.append(Violation(
+                        mod.path, node.lineno, self.id,
+                        "bare @ matmul in a kernel body cannot pin its "
+                        "accumulator dtype — use jnp.dot(..., "
+                        "preferred_element_type=jnp.float32)"))
+        return out
+
+
+class R3RhoBeforeCast(Rule):
+    """``rho`` must be computed from fp32 X, before any compute-dtype cast.
+
+    Within one function, flags ``compute_rho(X, ...)`` where ``X`` was
+    earlier rebound through ``.astype(problem_dtype(...))`` / a bf16 cast,
+    and ``compute_rho`` called directly on an ``.astype(...)`` expression.
+    (The bf16 megakernel mode must change only the per-round matmul
+    operands, never the step sizes — solver.make_problem's contract.)
+    """
+    id = "R3"
+    doc = "compute_rho must see pre-cast (fp32) X"
+
+    _CAST_MARKERS = ("problem_dtype", "bfloat16", "bf16")
+
+    def check(self, mod: ModuleInfo) -> Iterable[Violation]:
+        out: List[Violation] = []
+        for fn in ast.walk(mod.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            cast_lines = {}      # name -> first line it was cast-rebound
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Assign) and self._is_cast(mod,
+                                                                  node.value):
+                    for tgt in node.targets:
+                        if isinstance(tgt, ast.Name):
+                            cast_lines.setdefault(tgt.id, node.lineno)
+                if isinstance(node, ast.Call) \
+                        and mod.call_name(node) == "compute_rho" \
+                        and node.args:
+                    first = node.args[0]
+                    if self._is_cast(mod, first):
+                        out.append(Violation(
+                            mod.path, node.lineno, self.id,
+                            "compute_rho called on a compute-dtype-cast X "
+                            "— rho must be computed from fp32 X"))
+                    elif isinstance(first, ast.Name) \
+                            and first.id in cast_lines \
+                            and node.lineno > cast_lines[first.id]:
+                        out.append(Violation(
+                            mod.path, node.lineno, self.id,
+                            f"compute_rho({first.id}, ...) after "
+                            f"{first.id} was cast to the compute dtype on "
+                            f"line {cast_lines[first.id]} — compute rho "
+                            "first, cast X after"))
+            del cast_lines
+        return out
+
+    def _is_cast(self, mod: ModuleInfo, node: ast.AST) -> bool:
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call) \
+                    and isinstance(sub.func, ast.Attribute) \
+                    and sub.func.attr == "astype":
+                seg = mod.segment(sub)
+                if any(m in seg for m in self._CAST_MARKERS):
+                    return True
+        return False
+
+
+class R4TracerBranch(Rule):
+    """No Python ``if``/``while`` on traced values in jitted/scanned bodies.
+
+    In functions handed to ``lax.scan``/``while_loop``/``fori_loop``/
+    ``cond``/``switch``, to ``shard_map``, or used as Pallas kernel bodies,
+    a Python branch on a *positional* parameter is a concretization error
+    waiting to happen (positional params are the traced operands; keyword-
+    only params are static config bound via functools.partial).  Static
+    accesses — ``.shape``/``.dtype``/``.ndim``/``.size``, ``len()``,
+    ``isinstance()``, ``is None`` — are allowed.
+    """
+    id = "R4"
+    doc = "no Python if/while on traced values in jitted/scanned bodies"
+
+    def check(self, mod: ModuleInfo) -> Iterable[Violation]:
+        out: List[Violation] = []
+        bodies = mod.lax_bodies | mod.kernel_bodies | mod.shard_map_fns
+        for fn in bodies:
+            params = set(mod.positional_params(fn))
+            if not params:
+                continue
+            nested = {f for f in ast.walk(fn)
+                      if isinstance(f, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef, ast.Lambda))
+                      and f is not fn}
+            for node in ast.walk(fn):
+                if mod.enclosing_function(node) in nested:
+                    continue       # nested fns are analyzed on their own
+                test = None
+                if isinstance(node, (ast.If, ast.While)):
+                    test = node.test
+                elif isinstance(node, ast.IfExp):
+                    test = node.test
+                if test is None:
+                    continue
+                name = self._traced_name_in(mod, test, params)
+                if name is not None:
+                    kind = ("while" if isinstance(node, ast.While) else "if")
+                    out.append(Violation(
+                        mod.path, node.lineno, self.id,
+                        f"Python {kind} on traced parameter {name!r} "
+                        "inside a scanned/jitted body — use jnp.where / "
+                        "lax.cond (or make the value static)"))
+        return out
+
+    def _traced_name_in(self, mod: ModuleInfo, test: ast.AST,
+                        params: Set[str]) -> Optional[str]:
+        for node in ast.walk(test):
+            if not (isinstance(node, ast.Name) and node.id in params):
+                continue
+            if not self._is_static_use(mod, node, test):
+                return node.id
+        return None
+
+    def _is_static_use(self, mod: ModuleInfo, name: ast.Name,
+                       test: ast.AST) -> bool:
+        """True when every path from ``name`` up to the test goes through a
+        static access (.shape/.dtype/..., len(), isinstance(), is None)."""
+        cur = name
+        parent = mod.parents.get(cur)
+        while parent is not None:
+            if isinstance(parent, ast.Attribute) \
+                    and parent.attr in _SAFE_ATTRS:
+                return True
+            if isinstance(parent, ast.Call):
+                tail = mod.call_name(parent)
+                if tail in ("len", "isinstance", "getattr", "hasattr"):
+                    return True
+            if isinstance(parent, ast.Compare) \
+                    and all(isinstance(op, (ast.Is, ast.IsNot))
+                            for op in parent.ops):
+                return True
+            if parent is test:
+                break
+            cur, parent = parent, mod.parents.get(parent)
+        return False
+
+
+class R5KernelCollectives(Rule):
+    """No collectives inside a ``pallas_call`` kernel body.
+
+    ``psum``/``ppermute``/``all_gather``/... are mesh-level primitives;
+    inside a kernel body they either fail to lower or silently do the
+    wrong thing.  Collectives belong between kernel launches (the sharded
+    engines' contract — ``csvm_block_update`` takes the neighbour term as
+    an operand for exactly this reason).
+    """
+    id = "R5"
+    doc = "no psum/ppermute/all_gather inside a pallas_call kernel body"
+
+    def check(self, mod: ModuleInfo) -> Iterable[Violation]:
+        out: List[Violation] = []
+        for body in mod.kernel_bodies:
+            for node in ast.walk(body):
+                if isinstance(node, ast.Call) \
+                        and mod.call_name(node) in _COLLECTIVES:
+                    out.append(Violation(
+                        mod.path, node.lineno, self.id,
+                        f"collective {mod.call_name(node)!r} inside a "
+                        "Pallas kernel body — collectives run between "
+                        "kernel launches, never inside one"))
+        return out
+
+
+class R6MeshAxes(Rule):
+    """Mesh axis names must match a mesh constructed in ``launch/mesh.py``.
+
+    Collects the axis-name vocabulary from ``make_mesh`` calls in
+    launch/mesh.py and flags any other module using an unknown axis string
+    in ``axis_name=``, a collective's axis argument, or a
+    ``PartitionSpec``/``P`` spec — the silent-typo class where
+    ``psum(x, "nodes")`` raises only at trace time on a mesh that happens
+    not to bind it (or worse, binds it).
+    """
+    id = "R6"
+    doc = "shard_map/mesh axis names must exist in launch/mesh.py"
+
+    def __init__(self, allowed_axes: Optional[Set[str]] = None):
+        self.allowed_axes = allowed_axes
+
+    @staticmethod
+    def collect_mesh_axes(mesh_mod: ModuleInfo) -> Set[str]:
+        # axis tuples may be bound to a variable first (e.g.
+        # ``axes = ("pod", "data", "model") if multi_pod else (...)``),
+        # so resolve simple name assignments when walking make_mesh args
+        assigned: dict = {}
+        for node in ast.walk(mesh_mod.tree):
+            if isinstance(node, ast.Assign):
+                strs = {n.value for n in ast.walk(node.value)
+                        if isinstance(n, ast.Constant)
+                        and isinstance(n.value, str)}
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name) and strs:
+                        assigned.setdefault(tgt.id, set()).update(strs)
+        axes: Set[str] = set()
+        for node in ast.walk(mesh_mod.tree):
+            if isinstance(node, ast.Call) \
+                    and mesh_mod.call_name(node) == "make_mesh":
+                for sub in ast.walk(node):
+                    if isinstance(sub, ast.Constant) \
+                            and isinstance(sub.value, str):
+                        axes.add(sub.value)
+                    elif isinstance(sub, ast.Name) and sub.id in assigned:
+                        axes.update(assigned[sub.id])
+        return axes
+
+    def check(self, mod: ModuleInfo) -> Iterable[Violation]:
+        if self.allowed_axes is None or mod.path.endswith(MESH_PATH):
+            return []
+        out: List[Violation] = []
+        p_aliases = self._partition_spec_aliases(mod)
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            used: List[ast.Constant] = []
+            name = mod.call_name(node)
+            if name in _COLLECTIVES and len(node.args) >= 2:
+                used += self._strings_in(node.args[1])
+            for kw in node.keywords:
+                if kw.arg in ("axis_name", "axis_names"):
+                    used += self._strings_in(kw.value)
+            if isinstance(node.func, ast.Name) and node.func.id in p_aliases:
+                for a in node.args:
+                    used += self._strings_in(a)
+            for const in used:
+                if const.value not in self.allowed_axes:
+                    out.append(Violation(
+                        mod.path, const.lineno, self.id,
+                        f"axis name {const.value!r} does not match any "
+                        "mesh constructed in launch/mesh.py "
+                        f"(known: {sorted(self.allowed_axes)})"))
+        return out
+
+    @staticmethod
+    def _strings_in(node: ast.AST) -> List[ast.Constant]:
+        return [n for n in ast.walk(node)
+                if isinstance(n, ast.Constant) and isinstance(n.value, str)]
+
+    @staticmethod
+    def _partition_spec_aliases(mod: ModuleInfo) -> Set[str]:
+        aliases: Set[str] = set()
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.ImportFrom):
+                for alias in node.names:
+                    if alias.name == "PartitionSpec":
+                        aliases.add(alias.asname or alias.name)
+        return aliases
+
+
+class R7HostMathInTraced(Rule):
+    """No float64 or host ``np.`` math inside traced scope.
+
+    Inside jit-decorated functions, lax/vmap/shard_map bodies, and kernel
+    bodies (including everything lexically nested there): a ``np.foo(...)``
+    call forces a host sync / silently constant-folds a traced value, and
+    any ``float64`` mention breaks the fp32 accumulator discipline (jax
+    x64 is off; the literal either downcasts silently or, enabled,
+    doubles every buffer).
+    """
+    id = "R7"
+    doc = "no float64 literals or np. math in jitted paths"
+
+    def check(self, mod: ModuleInfo) -> Iterable[Violation]:
+        np_aliases = self._numpy_aliases(mod)
+        out: List[Violation] = []
+        for node in ast.walk(mod.tree):
+            if not mod.in_traced_scope(node):
+                continue
+            if isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Attribute) \
+                    and isinstance(node.func.value, ast.Name) \
+                    and node.func.value.id in np_aliases:
+                out.append(Violation(
+                    mod.path, node.lineno, self.id,
+                    f"host numpy call "
+                    f"{node.func.value.id}.{node.func.attr}(...) inside a "
+                    "traced/jitted path — use jnp"))
+            if isinstance(node, ast.Attribute) and node.attr == "float64":
+                out.append(Violation(
+                    mod.path, node.lineno, self.id,
+                    "float64 inside a traced/jitted path — the stack's "
+                    "accumulator discipline is fp32"))
+            if isinstance(node, ast.Constant) and node.value == "float64":
+                out.append(Violation(
+                    mod.path, node.lineno, self.id,
+                    '"float64" dtype literal inside a traced/jitted path'))
+        return out
+
+    @staticmethod
+    def _numpy_aliases(mod: ModuleInfo) -> Set[str]:
+        aliases: Set[str] = set()
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    if alias.name == "numpy":
+                        aliases.add(alias.asname or "numpy")
+        return aliases
+
+
+class R8CachedBuilder(Rule):
+    """shard_map/jit program builders must be cached.
+
+    A function that constructs a ``shard_map`` program and wraps it in
+    ``jax.jit`` builds a *fresh* closure per call — jit caches by function
+    identity, so every driver call would retrace and recompile from
+    scratch (the PR 4 recompile-storm class; see
+    ``decentral.build_mesh_path``).  Such builders must carry
+    ``functools.lru_cache`` / ``functools.cache``.
+    """
+    id = "R8"
+    doc = "shard_map/jit program builders must carry lru_cache"
+
+    def check(self, mod: ModuleInfo) -> Iterable[Violation]:
+        out: List[Violation] = []
+        for fn in ast.walk(mod.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if not self._builds_program(mod, fn):
+                continue
+            if not any("cache" in mod.segment(d) for d in fn.decorator_list):
+                out.append(Violation(
+                    mod.path, fn.lineno, self.id,
+                    f"{fn.name} builds a shard_map+jit program but is not "
+                    "lru_cache'd — every call would retrace and recompile "
+                    "(jit caches by function identity)"))
+        return out
+
+    def _builds_program(self, mod: ModuleInfo, fn) -> bool:
+        nested = {f for f in ast.walk(fn)
+                  if isinstance(f, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                    ast.Lambda)) and f is not fn}
+        has_shard_map = has_jit = False
+        for node in ast.walk(fn):
+            if mod.enclosing_function(node) in nested:
+                continue
+            if isinstance(node, ast.Call):
+                name = mod.call_name(node)
+                if "shard_map" in name:
+                    has_shard_map = True
+                if name == "jit":
+                    has_jit = True
+        return has_shard_map and has_jit
+
+
+def default_rules(allowed_axes: Optional[Set[str]] = None) -> Sequence[Rule]:
+    return (R1ProxHome(), R2KernelDotPrecision(), R3RhoBeforeCast(),
+            R4TracerBranch(), R5KernelCollectives(), R6MeshAxes(allowed_axes),
+            R7HostMathInTraced(), R8CachedBuilder())
