@@ -19,7 +19,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import losses, solver
+from repro.core import losses, sanitize, solver
 # Re-exported: historically defined here, canonical home is core.solver.
 from repro.core.solver import (SolverState, compute_rho,  # noqa: F401
                                power_iteration_lmax, soft_threshold)
@@ -39,6 +39,9 @@ class ADMMConfig:
     use_pallas: bool = False   # route the local update through the TPU kernel
     backend: str = "auto"      # "auto" (use_pallas decides) | "jnp" |
     #                            "pallas" | "megakernel" | "megakernel_bf16"
+    sanitize: bool = False     # thread checkify E1-E7 term checks through the
+    #                            step and localize the first non-finite value
+    #                            (dense drivers only; see core.sanitize)
 
 
 class ADMMState(NamedTuple):
@@ -67,7 +70,25 @@ def admm_step(X: Array, y: Array, W: Array, deg: Array, rho: Array,
     return ADMMState(new.B, new.P, new.t)
 
 
+def _decsvm_fit_impl(X, y, W, beta0, lam_weights, cfg, track_history):
+    prob = solver.make_problem(X, y, W, cfg)
+    step = solver.make_step(cfg, lambda B: W @ B, W=W)
+    state = solver.init_state(prob, B0=beta0)
+    out = solver.run_fixed(step, prob, cfg.lam, lam_weights,
+                           num_iters=cfg.max_iter, state=state,
+                           track_history=track_history)
+    if track_history:
+        final, hist = out
+        return final.B, hist
+    return out.B
+
+
 @functools.partial(jax.jit, static_argnames=("cfg", "track_history"))
+def _decsvm_fit_jit(X, y, W, cfg, beta0=None, track_history=False,
+                    lam_weights=None):
+    return _decsvm_fit_impl(X, y, W, beta0, lam_weights, cfg, track_history)
+
+
 def decsvm_fit(X: Array, y: Array, W: Array, cfg: ADMMConfig,
                beta0: Optional[Array] = None,
                track_history: bool = False,
@@ -82,17 +103,21 @@ def decsvm_fit(X: Array, y: Array, W: Array, cfg: ADMMConfig,
       lam_weights: optional (p,) per-coordinate l1 multipliers (LLA stage 2).
     Returns:
       B: (m, p) final node estimates; and, if track_history, H: (T, m, p).
+
+    With ``cfg.sanitize`` the same program runs under ``checkify`` and
+    raises with the E1-E7 term + round localization of the first
+    non-finite value (``core.sanitize``); without it, the traced program
+    is bit-identical to a config predating the flag.
     """
-    prob = solver.make_problem(X, y, W, cfg)
-    step = solver.make_step(cfg, lambda B: W @ B, W=W)
-    state = solver.init_state(prob, B0=beta0)
-    out = solver.run_fixed(step, prob, cfg.lam, lam_weights,
-                           num_iters=cfg.max_iter, state=state,
-                           track_history=track_history)
-    if track_history:
-        final, hist = out
-        return final.B, hist
-    return out.B
+    if sanitize.wants_sanitize(cfg):
+        err, out = sanitize.checked_call(_decsvm_fit_impl, cfg,
+                                         track_history)(
+            X, y, W, beta0, lam_weights)
+        err.throw()
+        return out
+    return _decsvm_fit_jit(X, y, W, cfg, beta0=beta0,
+                           track_history=track_history,
+                           lam_weights=lam_weights)
 
 
 def objective(X: Array, y: Array, beta: Array, cfg: ADMMConfig) -> Array:

@@ -16,14 +16,30 @@ from typing import Tuple
 
 import jax
 
-from repro.core import solver
+from repro.core import sanitize, solver
 from repro.core.admm import ADMMConfig
 
 Array = jax.Array
 
 
+def _fit_tol_impl(X, y, W, tol, cfg, stop_rule, check_every):
+    prob = solver.make_problem(X, y, W, cfg)
+    step = solver.make_step(cfg, lambda B: W @ B, W=W)
+    residual_fn = (solver.kkt_residual_fn(cfg) if stop_rule == "kkt"
+                   else None)
+    final = solver.run_tol(step, prob, cfg.lam, max_iter=cfg.max_iter,
+                           tol=tol, residual_fn=residual_fn,
+                           check_every=check_every)
+    return final.B, final.t
+
+
 @functools.partial(jax.jit, static_argnames=("cfg", "stop_rule",
                                              "check_every"))
+def _fit_tol_jit(X, y, W, cfg, tol=1e-6, stop_rule="progress",
+                 check_every=4):
+    return _fit_tol_impl(X, y, W, tol, cfg, stop_rule, check_every)
+
+
 def decsvm_fit_tol(X: Array, y: Array, W: Array, cfg: ADMMConfig,
                    tol: float = 1e-6,
                    stop_rule: str = "progress",
@@ -45,17 +61,27 @@ def decsvm_fit_tol(X: Array, y: Array, W: Array, cfg: ADMMConfig,
     """
     if stop_rule not in ("kkt", "progress"):
         raise ValueError(f"stop_rule {stop_rule!r} not in ('kkt', 'progress')")
-    prob = solver.make_problem(X, y, W, cfg)
+    if sanitize.wants_sanitize(cfg):
+        err, out = sanitize.checked_call(_fit_tol_impl, cfg, stop_rule,
+                                         check_every)(X, y, W, tol)
+        err.throw()
+        return out
+    return _fit_tol_jit(X, y, W, cfg, tol=tol, stop_rule=stop_rule,
+                        check_every=check_every)
+
+
+def _fit_uneven_impl(X, y, mask, W, cfg):
+    prob = solver.make_problem(X, y, W, cfg, mask=mask)
     step = solver.make_step(cfg, lambda B: W @ B, W=W)
-    residual_fn = (solver.kkt_residual_fn(cfg) if stop_rule == "kkt"
-                   else None)
-    final = solver.run_tol(step, prob, cfg.lam, max_iter=cfg.max_iter,
-                           tol=tol, residual_fn=residual_fn,
-                           check_every=check_every)
-    return final.B, final.t
+    final = solver.run_fixed(step, prob, cfg.lam, num_iters=cfg.max_iter)
+    return final.B
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
+def _fit_uneven_jit(X, y, mask, W, cfg):
+    return _fit_uneven_impl(X, y, mask, W, cfg)
+
+
 def decsvm_fit_uneven(X: Array, y: Array, mask: Array, W: Array,
                       cfg: ADMMConfig) -> Array:
     """Algorithm 1 with per-node sample masks.
@@ -66,7 +92,9 @@ def decsvm_fit_uneven(X: Array, y: Array, mask: Array, W: Array,
     backend; rho comes from the masked second moment (zero rows contribute
     nothing).
     """
-    prob = solver.make_problem(X, y, W, cfg, mask=mask)
-    step = solver.make_step(cfg, lambda B: W @ B, W=W)
-    final = solver.run_fixed(step, prob, cfg.lam, num_iters=cfg.max_iter)
-    return final.B
+    if sanitize.wants_sanitize(cfg):
+        err, out = sanitize.checked_call(_fit_uneven_impl, cfg)(
+            X, y, mask, W)
+        err.throw()
+        return out
+    return _fit_uneven_jit(X, y, mask, W, cfg)

@@ -38,7 +38,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.core import solver
+from repro.core import sanitize, solver
 from repro.core.admm import ADMMConfig
 
 Array = jax.Array
@@ -217,6 +217,7 @@ def decsvm_fit_sharded(X: Array, y: Array, W: np.ndarray, cfg: ADMMConfig,
     lam_weights: optional (p,) per-coordinate l1 multipliers (LLA stage 2).
     Returns B: (m, p) (fully replicated on exit).
     """
+    sanitize.reject_unsupported(cfg, "decsvm_fit_sharded")
     mesh = mesh or make_node_mesh()
     m, _, p = X.shape
     Wj, deg, rho = _prep(X, W, cfg, schedule)
@@ -240,6 +241,7 @@ def decsvm_path_sharded(X: Array, y: Array, W: np.ndarray, lams,
     all L grid points — see ``decsvm_path_mesh`` for the 2-D layout that
     shards the grid too.
     """
+    sanitize.reject_unsupported(cfg, "decsvm_path_sharded")
     mesh = mesh or make_node_mesh()
     m, _, p = X.shape
     lams = jnp.asarray(lams, jnp.float32)
@@ -476,6 +478,7 @@ def decsvm_path_mesh(X: Array, y: Array, W: np.ndarray, lams,
     """
     from repro.core.path import PathResult  # local import: avoid cycle
 
+    sanitize.reject_unsupported(cfg, "decsvm_path_mesh")
     m, n, p = X.shape
     lams = np.asarray(lams, np.float32)
     L = len(lams)

@@ -48,7 +48,7 @@ from typing import NamedTuple, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core import solver
+from repro.core import sanitize, solver
 from repro.core.admm import ADMMConfig
 from repro.core.tuning import modified_bic_jnp
 
@@ -73,6 +73,7 @@ def decsvm_path_batched(X: Array, y: Array, W: Array, lams: Array,
     X: (m, n, p), y: (m, n), W: (m, m), lams: (L,).
     Returns the path B: (L, m, p).  cfg.lam is ignored.
     """
+    sanitize.reject_unsupported(cfg, "decsvm_path_batched")
     prob = solver.make_problem(X, y, W, cfg)
     step = solver.make_step(cfg, lambda B: W @ B, W=W)
     lams = jnp.asarray(lams, X.dtype)
@@ -104,6 +105,7 @@ def decsvm_path_warm(X: Array, y: Array, W: Array, lams: Array,
     """
     if stop_rule not in ("kkt", "progress"):
         raise ValueError(f"stop_rule {stop_rule!r} not in ('kkt', 'progress')")
+    sanitize.reject_unsupported(cfg, "decsvm_path_warm")
     prob = solver.make_problem(X, y, W, cfg)
     step = solver.make_step(cfg, lambda B: W @ B, W=W)
     lams = jnp.asarray(lams, X.dtype)
@@ -142,6 +144,7 @@ def decsvm_path_cv(X: Array, y: Array, W: Array, lams: Array,
     inside one compiled program.  Returns cv (L,): mean held-out hinge per
     grid point — lower is better.
     """
+    sanitize.reject_unsupported(cfg, "decsvm_path_cv")
     lams = jnp.asarray(lams, X.dtype)
     step = solver.make_step(cfg, lambda B: W @ B, W=W)
 
@@ -181,7 +184,9 @@ def _path_select(X, y, W, lams, cfg, mode, tol, lam_weights, stop_rule,
     return PathResult(lams[i], path[i], lams, path, crits, iters)
 
 
-def _validate_select(mode, stop_rule, criterion):
+def _validate_select(mode, stop_rule, criterion, cfg=None):
+    if cfg is not None:
+        sanitize.reject_unsupported(cfg, "decsvm_path_select")
     if mode not in ("warm", "batched"):
         raise ValueError(f"mode {mode!r} not in ('warm', 'batched')")
     if stop_rule not in ("kkt", "progress"):
@@ -215,7 +220,7 @@ def decsvm_path_select(X: Array, y: Array, W: Array,
     and the argmin stay on device; nothing forces a host sync until the
     caller reads the result.
     """
-    _validate_select(mode, stop_rule, criterion)
+    _validate_select(mode, stop_rule, criterion, cfg)
     cv_masks = _cv_masks_for(X.shape[0], X.shape[1], criterion, cv_folds,
                              cv_seed, X.dtype)
     return _path_select(X, y, W, jnp.asarray(lams), cfg, mode, tol,
@@ -237,6 +242,7 @@ def decsvm_fit_many(Xs: Array, ys: Array, Ws: Array, lams: Array,
     ``dataclasses.replace(cfg, lam=...)`` recompile of the serial path
     disappears.  Returns B: (B, m, p); cfg.lam is ignored.
     """
+    sanitize.reject_unsupported(cfg, "decsvm_fit_many")
     lams = jnp.asarray(lams, Xs.dtype)
 
     def one(X, y, W, lam, w):
@@ -288,7 +294,7 @@ def decsvm_path_select_many(Xs: Array, ys: Array, Ws: Array,
     best_lam (B,), best_B (B, m, p), lams (B, L), path (B, L, m, p),
     criteria (B, L), iters (B, L).
     """
-    _validate_select(mode, stop_rule, criterion)
+    _validate_select(mode, stop_rule, criterion, cfg)
     Xs = jnp.asarray(Xs)
     if Xs.ndim != 4:
         raise ValueError(f"Xs must be (B, m, n, p), got shape {Xs.shape}")

@@ -1,0 +1,150 @@
+"""Localizing numerics sanitizer for Algorithm 1 (``ADMMConfig(sanitize=True)``).
+
+A NaN that surfaces in the final ``B`` says nothing about *which* term of
+update (7a')/(7b) produced it or *when*.  With ``sanitize=True`` the
+solver step is wrapped with ``checkify`` checks in dataflow order, so the
+first failing check names the producing term and the round index:
+
+  E1  margin weights      w = L_h'(y * X b) * y            (per node)
+  E2  gradient            X^T w / n_l
+  E3  neighbour sum       (W B)_l   (whatever ``neighbor_sum`` supplies)
+  E4  primal update       b+ = S_{lam w}(omega z)          — update (7a')
+  E5  bf16 range          |b+| <= finfo(bf16).max  (megakernel_bf16 only:
+                          next round casts b+ to the bf16 MXU operand,
+                          where anything above that saturates to inf)
+  E6  dual accumulator    p+ = p + tau (deg b+ - (W B+))   — update (7b)
+  E7  KKT statistic       ``solver.kkt_residual`` output   (kkt stop rule)
+
+Checks run *around* the unmodified step (terms are recomputed from the
+same inputs), so ``sanitize=False`` executes the exact pre-existing
+program — bit-identical jaxpr, proven by ``tests/test_sanitize.py``.
+
+``checkify.check`` cannot live under a plain ``jax.jit`` (jax refuses to
+abstractly evaluate an unfunctionalized check), so every sanitizing
+driver routes through ``checkify.checkify(...)`` + ``err.throw()`` —
+see ``checked_call`` and the driver wrappers in ``admm``/
+``admm_adaptive``.  Engines that cannot thread checkify (shard_map
+collectives, the lambda-grid vmaps, batch serving) reject sanitize
+configs up front via ``reject_unsupported`` instead of silently tracing
+a check-free program.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import checkify
+
+from repro.core import losses
+
+Array = jax.Array
+
+#: the errors= set every sanitizing driver must discharge
+USER_CHECKS = checkify.user_checks
+
+_SUPPORTED = ("decsvm_fit", "decsvm_fit_tol", "decsvm_fit_uneven")
+
+
+def wants_sanitize(cfg) -> bool:
+    """True iff this config asks for the sanitizer.  ``getattr`` so configs
+    predating the field (duck-typed ADMMConfigs) keep working unchanged."""
+    return bool(getattr(cfg, "sanitize", False))
+
+
+def reject_unsupported(cfg, where: str) -> None:
+    """Fail fast on engines that cannot functionalize the checks."""
+    if wants_sanitize(cfg):
+        raise NotImplementedError(
+            f"{where}: cfg.sanitize=True is only supported by the dense "
+            f"single-process drivers {_SUPPORTED}; sharded/mesh and "
+            "lambda-grid engines cannot thread checkify through their "
+            "collectives/vmaps. Re-fit the offending problem with a dense "
+            "driver to localize the failure.")
+
+
+def _finite(x) -> Array:
+    return jnp.all(jnp.isfinite(x))
+
+
+def checked_step(step, cfg, neighbor_sum):
+    """Wrap one solver step with the E1-E6 term checks.
+
+    The wrapped step recomputes the (7a') intermediate terms from the
+    same inputs the real step reads (the step itself stays untouched —
+    that is what keeps ``sanitize=False`` bit-identical) and checks each
+    in dataflow order; ``checkify``'s first-failure-wins semantics then
+    localize a blow-up to its producing term.
+    """
+    kern = losses.get_kernel(cfg.kernel)
+
+    def wrapped(prob, state, lam, lam_weights=None):
+        t = state.t
+        X32 = prob.X.astype(jnp.float32)
+        marg = jnp.einsum("mnp,mp->mn", X32, state.B)
+        wts = kern.dloss(prob.y * marg, cfg.h) * prob.y
+        checkify.check(
+            _finite(wts),
+            "E1: non-finite margin weight L_h'(y*Xb)*y at round {t}", t=t)
+        if prob.mask is None:
+            n_eff = jnp.full((prob.X.shape[0], 1), float(prob.X.shape[1]),
+                             jnp.float32)
+        else:
+            wts = wts * prob.mask
+            n_eff = jnp.maximum(jnp.sum(prob.mask, axis=1, keepdims=True),
+                                1.0)
+        grad = jnp.einsum("mnp,mn->mp", X32, wts) / n_eff
+        checkify.check(
+            _finite(grad),
+            "E2: non-finite gradient X^T w / n at round {t}", t=t)
+        checkify.check(
+            _finite(neighbor_sum(state.B)),
+            "E3: non-finite neighbour sum (W B) at round {t}", t=t)
+
+        new = step(prob, state, lam, lam_weights)
+        checkify.check(
+            _finite(new.B),
+            "E4: non-finite primal update (7a') at round {t}", t=t)
+        if prob.X.dtype == jnp.bfloat16:
+            checkify.check(
+                jnp.max(jnp.abs(new.B)) <= float(jnp.finfo(jnp.bfloat16).max),
+                "E5: primal iterate exceeds bf16 range at round {t} "
+                "(next round's bf16 MXU operand cast saturates to inf)",
+                t=t)
+        checkify.check(
+            _finite(new.P),
+            "E6: non-finite dual accumulator (7b) at round {t}", t=t)
+        return new
+
+    return wrapped
+
+
+def checked_residual(fn, cfg):
+    """Wrap a ``run_tol`` residual_fn with the E7 statistic check,
+    preserving its ``kind`` tag (so the driver still recognises a KKT
+    rule — though under sanitize there is no fused megakernel path)."""
+
+    def wrapped(prob, state, lam, lam_weights):
+        stat = fn(prob, state, lam, lam_weights)
+        checkify.check(
+            _finite(stat),
+            "E7: non-finite KKT stop statistic at round {t}", t=state.t)
+        return stat
+
+    kind = getattr(fn, "kind", None)
+    if kind is not None:
+        wrapped.kind = kind
+    return wrapped
+
+
+@functools.lru_cache(maxsize=64)
+def checked_call(impl, *static):
+    """jitted ``checkify``-transform of ``impl`` closed over its static
+    arguments.  ``impl`` must accept ``(*arrays, *static)``; the cache
+    keys on (impl, *static) so repeated sanitizing fits reuse one
+    executable, same as the un-sanitized jit caches."""
+
+    def run(*arrays):
+        return impl(*arrays, *static)
+
+    return jax.jit(checkify.checkify(run, errors=USER_CHECKS))

@@ -264,6 +264,16 @@ def make_step(cfg, neighbor_sum: Callable[[Array], Array], *,
         return SolverState(B_new, P_new, state.t + 1,
                            jnp.max(jnp.abs(B_new - B)))
 
+    if getattr(cfg, "sanitize", False):
+        # Wrap with the E1-E6 term checks and do NOT attach round_block:
+        # the fused megakernel hides exactly the per-term dataflow the
+        # sanitizer localizes, so sanitizing runs take the streaming
+        # per-round path (checks compose through scan/while there).  The
+        # False branch returns the step entirely untouched — that is the
+        # bit-identity contract tests/test_sanitize.py pins.
+        from repro.core import sanitize
+        return sanitize.checked_step(step, cfg, neighbor_sum)
+
     if backend in MEGAKERNEL_BACKENDS and W is not None:
 
         def round_block(prob, state, lam, lam_weights, *, num_rounds: int,
@@ -426,6 +436,9 @@ def kkt_residual_fn(cfg, axis_name: Optional[str] = None):
         return kkt_residual(prob, cfg, state.B, lam, lam_weights,
                             axis_name=axis_name)
     fn.kind = "kkt"
+    if getattr(cfg, "sanitize", False):
+        from repro.core import sanitize
+        return sanitize.checked_residual(fn, cfg)
     return fn
 
 

@@ -83,7 +83,7 @@ def _grad_update_kernel(x_ref, w_ref, beta_ref, pdual_ref, neigh_ref,
 def csvm_local_update(X, y, beta, p_dual, neigh, rho, omega, lam, *,
                       h: float, kernel: str = "epanechnikov",
                       block_n: int = 256, block_p: int = 512,
-                      interpret: bool = True):
+                      interpret: bool | None = None):
     """Fused ADMM local update for one node.  Shapes: X (n, p), vectors (p,).
 
     lam may be a scalar (uniform l1 level) or a (p,) per-coordinate vector
@@ -91,16 +91,17 @@ def csvm_local_update(X, y, beta, p_dual, neigh, rho, omega, lam, *,
     n and p are padded to tile multiples inside; padding rows get y=0 so
     their dloss weight contributes sign(y)=0... (we zero w explicitly).
     """
+    interpret = _resolve_interpret(interpret)
     n, p = X.shape
     bn, bp = min(block_n, _rup(n, 8)), min(block_p, _rup(p, 128))
     n_pad, p_pad = _rup(n, bn), _rup(p, bp)
-    Xp = jnp.pad(X, ((0, n_pad - n), (0, p_pad - p)))
-    yp = jnp.pad(y, (0, n_pad - n))            # y=0 rows -> w=0 after mask
-    bpad = jnp.pad(beta, (0, p_pad - p))
-    ppad = jnp.pad(p_dual, (0, p_pad - p))
-    npad = jnp.pad(neigh, (0, p_pad - p))
+    Xp = _pad0(X, ((0, n_pad - n), (0, p_pad - p)))
+    yp = _pad0(y, (0, n_pad - n))              # y=0 rows -> w=0 after mask
+    bpad = _pad0(beta, (0, p_pad - p))
+    ppad = _pad0(p_dual, (0, p_pad - p))
+    npad = _pad0(neigh, (0, p_pad - p))
     lam_vec = jnp.broadcast_to(jnp.asarray(lam, jnp.float32).reshape(-1), (p,))
-    lpad = jnp.pad(lam_vec, (0, p_pad - p))
+    lpad = _pad0(lam_vec, (0, p_pad - p))
 
     ycol = yp[:, None].astype(jnp.float32)
     bcol = bpad[:, None].astype(jnp.float32)
@@ -149,6 +150,18 @@ def csvm_local_update(X, y, beta, p_dual, neigh, rho, omega, lam, *,
 
 def _rup(x: int, mult: int) -> int:
     return ((x + mult - 1) // mult) * mult
+
+
+def _pad0(a, widths):
+    # dtype-matched zero fill: jnp.pad's default weak-int 0 inserts a
+    # convert_element_type into every traced launch (jaxtrace contract d)
+    return jnp.pad(a, widths, constant_values=a.dtype.type(0))
+
+
+def _resolve_interpret(interpret):
+    # pallas runs interpreted everywhere but TPU; an unconditional
+    # interpret=True default would silently deoptimize TPU runs (R9)
+    return jax.default_backend() != "tpu" if interpret is None else interpret
 
 
 # --------------------------------------------------------------------------
@@ -264,7 +277,7 @@ def _round_megakernel(x_ref, y_ref, wadj_ref, deg_ref, rho_ref, omega_ref,
 def csvm_round_block(X, y, B, P, W, deg, rho, omega, lam_vec, nact, *,
                      tau: float, lam0: float, h: float,
                      kernel: str = "epanechnikov", num_rounds: int = 1,
-                     want_kkt: bool = False, interpret: bool = True):
+                     want_kkt: bool = False, interpret: bool | None = None):
     """``num_rounds`` fused ADMM rounds over the whole network.
 
     X (m, n, p) in the compute dtype (fp32 or bf16 — the mixed-precision
@@ -274,20 +287,21 @@ def csvm_round_block(X, y, B, P, W, deg, rho, omega, lam_vec, nact, *,
     Returns (B, P, stat) with fp32 B/P and stat the KKT residual
     (``want_kkt``) or last-active-round progress max|dB|.
     """
+    interpret = _resolve_interpret(interpret)
     m, n, p = X.shape
     cd = jnp.bfloat16 if X.dtype == jnp.bfloat16 else jnp.float32
     sub = 16 if cd == jnp.bfloat16 else 8
     m_pad, n_pad, p_pad = _rup(m, 8), _rup(n, sub), _rup(p, 128)
     f32 = jnp.float32
-    Xp = jnp.pad(X.astype(cd), ((0, m_pad - m), (0, n_pad - n),
-                                (0, p_pad - p)))
-    yp = jnp.pad(y.astype(f32), ((0, m_pad - m), (0, n_pad - n)))
-    Bp = jnp.pad(B.astype(f32), ((0, m_pad - m), (0, p_pad - p)))
-    Pp = jnp.pad(P.astype(f32), ((0, m_pad - m), (0, p_pad - p)))
-    Wp = jnp.pad(W.astype(f32), ((0, m_pad - m), (0, m_pad - m)))
-    col = lambda v: jnp.pad(v.astype(f32), (0, m_pad - m))[:, None]
+    Xp = _pad0(X.astype(cd), ((0, m_pad - m), (0, n_pad - n),
+                              (0, p_pad - p)))
+    yp = _pad0(y.astype(f32), ((0, m_pad - m), (0, n_pad - n)))
+    Bp = _pad0(B.astype(f32), ((0, m_pad - m), (0, p_pad - p)))
+    Pp = _pad0(P.astype(f32), ((0, m_pad - m), (0, p_pad - p)))
+    Wp = _pad0(W.astype(f32), ((0, m_pad - m), (0, m_pad - m)))
+    col = lambda v: _pad0(v.astype(f32), (0, m_pad - m))[:, None]
     lam_row = jnp.broadcast_to(jnp.asarray(lam_vec, f32).reshape(-1), (p,))
-    lam_row = jnp.pad(lam_row, (0, p_pad - p))[None, :]
+    lam_row = _pad0(lam_row, (0, p_pad - p))[None, :]
     nact2 = jnp.asarray(nact, jnp.int32).reshape(1, 1)
 
     Bn, Pn, stat = pl.pallas_call(
@@ -333,26 +347,28 @@ def _block_update_kernel(x_ref, y_ref, b_ref, p_ref, neigh_ref, rho_ref,
 @functools.partial(jax.jit,
                    static_argnames=("h", "kernel", "interpret"))
 def csvm_block_update(X, y, B, P, neigh, rho, omega, lam_vec, *, h: float,
-                      kernel: str = "epanechnikov", interpret: bool = True):
+                      kernel: str = "epanechnikov",
+                      interpret: bool | None = None):
     """Fused primal update (7a') for a stacked node block.
 
     X (m, n, p) compute dtype; y (m, n); B/P/neigh (m, p) fp32 (neigh is
     the precomputed tau*(deg*B + (WB)) rows); rho/omega (m,); lam_vec (p,).
     Returns B_new (m, p) fp32.
     """
+    interpret = _resolve_interpret(interpret)
     m, n, p = X.shape
     cd = jnp.bfloat16 if X.dtype == jnp.bfloat16 else jnp.float32
     sub = 16 if cd == jnp.bfloat16 else 8
     m_pad, n_pad, p_pad = _rup(m, 8), _rup(n, sub), _rup(p, 128)
     f32 = jnp.float32
-    Xp = jnp.pad(X.astype(cd), ((0, m_pad - m), (0, n_pad - n),
-                                (0, p_pad - p)))
-    yp = jnp.pad(y.astype(f32), ((0, m_pad - m), (0, n_pad - n)))
-    pad_mp = lambda a: jnp.pad(a.astype(f32), ((0, m_pad - m),
-                                               (0, p_pad - p)))
-    col = lambda v: jnp.pad(v.astype(f32), (0, m_pad - m))[:, None]
+    Xp = _pad0(X.astype(cd), ((0, m_pad - m), (0, n_pad - n),
+                              (0, p_pad - p)))
+    yp = _pad0(y.astype(f32), ((0, m_pad - m), (0, n_pad - n)))
+    pad_mp = lambda a: _pad0(a.astype(f32), ((0, m_pad - m),
+                                             (0, p_pad - p)))
+    col = lambda v: _pad0(v.astype(f32), (0, m_pad - m))[:, None]
     lam_row = jnp.broadcast_to(jnp.asarray(lam_vec, f32).reshape(-1), (p,))
-    lam_row = jnp.pad(lam_row, (0, p_pad - p))[None, :]
+    lam_row = _pad0(lam_row, (0, p_pad - p))[None, :]
 
     out = pl.pallas_call(
         functools.partial(_block_update_kernel, h=h, kernel=kernel,

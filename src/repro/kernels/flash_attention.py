@@ -73,8 +73,10 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
                      "interpret"))
 def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
                     sm_scale: float | None = None, block_q: int = 128,
-                    block_k: int = 128, interpret: bool = True):
+                    block_k: int = 128, interpret: bool | None = None):
     """q: (B, H, S, D); k, v: (B, KV, S, D).  Returns (B, H, S, D)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     B, H, S, D = q.shape
     KV = k.shape[1]
     assert H % KV == 0, (H, KV)

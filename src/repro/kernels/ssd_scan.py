@@ -73,12 +73,15 @@ def _ssd_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, y_ref, state_scr,
 
 @functools.partial(
     jax.jit, static_argnames=("chunk", "interpret"))
-def ssd_scan(x, dt, A, B, C, D, *, chunk: int = 64, interpret: bool = True):
+def ssd_scan(x, dt, A, B, C, D, *, chunk: int = 64,
+             interpret: bool | None = None):
     """Chunked SSD scan.
 
     x: (b, s, h, p); dt: (b, s, h) (pre-softplused, > 0); A: (h,) (< 0);
     B, C: (b, s, n) single-group; D: (h,).  Returns y: (b, s, h, p).
     """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     b, s, h, p = x.shape
     n = B.shape[-1]
     assert s % chunk == 0, (s, chunk)

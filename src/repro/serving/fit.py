@@ -182,6 +182,8 @@ class DecsvmFitServer(FifoEngine):
         completed-but-undelivered (the old server silently overwrote the
         earlier result).  The request object is not mutated: a
         ``lams=None`` grid is resolved into the server's own record."""
+        from repro.core import sanitize
+        sanitize.reject_unsupported(req.cfg, "DecsvmFitServer.submit")
         lams = (tuning.lambda_grid(np.asarray(req.X), np.asarray(req.y),
                                    num=req.num)
                 if req.lams is None else np.asarray(req.lams))

@@ -327,11 +327,10 @@ def test_waiver_with_reason_suppresses_named_rule():
     assert lint_source(src2, path="repro/core/x.py", allowed_axes=AXES) == []
 
 def test_waiver_without_reason_is_w0_and_does_not_suppress():
-    src = """
-    def f(v, t):
-        # declint: disable=R1
-        return jnp.sign(v) * jnp.maximum(jnp.abs(v) - t, 0.0)
-    """
+    # the reasonless marker is concatenated so this file itself stays W0-clean
+    src = ("def f(v, t):\n"
+           "    # declint: dis" "able=R1\n"
+           "    return jnp.sign(v) * jnp.maximum(jnp.abs(v) - t, 0.0)\n")
     got = lint(src)
     assert _rules_of(got) == ["R1", "W0"]
 
@@ -342,6 +341,57 @@ def test_waiver_only_covers_named_rules():
         return jnp.sign(v) * jnp.maximum(jnp.abs(v) - t, 0.0)
     """
     assert _rules_of(lint(src)) == ["R1"]
+
+
+# -- R9: interpret literals + the relaxed tier ------------------------------
+
+
+def test_r9_flags_literal_interpret_true_in_call_and_default():
+    bad = """
+    def csvm(x, interpret=True):
+        return pl.pallas_call(body, out_shape=x, interpret=True)(x)
+    """
+    got = lint(bad, path="repro/kernels/csvm_update.py")
+    assert _rules_of(got) == ["R9"]
+    assert len(got) == 2          # the param default and the call keyword
+
+def test_r9_clean_on_backend_resolved_interpret():
+    ok = """
+    def csvm(x, interpret=None):
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        return pl.pallas_call(body, out_shape=x, interpret=interpret)(x)
+    """
+    assert lint(ok, path="repro/kernels/csvm_update.py") == []
+
+def test_relaxed_tier_skips_test_only_idioms():
+    # prox oracle (R1), tracer-branch oracle (R4), pinned interpret (R9):
+    # all fine in a test file under the relaxed tier
+    src = textwrap.dedent("""
+    def soft_threshold(v, t):
+        return jnp.sign(v) * jnp.maximum(jnp.abs(v) - t, 0.0)
+
+    def run(x, interpret=True):
+        return pl.pallas_call(body, out_shape=x, interpret=True)(x)
+    """)
+    relaxed = lint_source(src, path="tests/test_x.py", relaxed=True)
+    assert relaxed == []
+    strict = lint_source(src, path="repro/core/x.py", allowed_axes=AXES)
+    assert {"R1", "R9"} <= set(_rules_of(strict))
+
+def test_relaxed_tier_still_fires_on_real_bugs():
+    # a kernel body with an unqualified dot is a bug even in a test file
+    src = textwrap.dedent("""
+    def body(x_ref, o_ref):
+        o_ref[...] = x_ref[...] @ x_ref[...]
+    """)
+    got = lint_source(src, path="tests/kernels/test_k.py", relaxed=True)
+    assert _rules_of(got) == ["R2"]
+
+def test_lint_paths_applies_relaxed_tier_to_tests_dir():
+    # the repo's own tests/ tree, linted via lint_paths, must come back
+    # clean under the relaxed tier (this is the CI invocation)
+    assert lint_paths([ROOT / "tests"]) == []
 
 
 # -- repo gate + CLI --------------------------------------------------------
@@ -418,6 +468,17 @@ def test_bench_schema_validates_checked_in_artifacts():
     assert artifacts, "no BENCH_*.json artifacts at repo root"
     for f in artifacts:
         assert validate_file(f) == [], f
+
+def test_bench_schema_speedups_must_be_derivable_from_timings():
+    # the valid fixture's 2.0 equals steady jnp/megakernel — accepted;
+    # a hand-edited headline number no timing pair explains is rejected
+    doc = _valid_bench()
+    doc["speedup_megakernel_vs_jnp"] = 3.7
+    problems = validate(doc, name="megakernel")
+    assert any("derivable" in p for p in problems), problems
+    # nested per-split leaves count as provenance too (0.4 / 0.1 = 4.0)
+    doc["speedup_megakernel_vs_jnp"] = 4.0
+    assert validate(doc, name="megakernel") == []
 
 
 # -- compile guard ----------------------------------------------------------

@@ -92,6 +92,43 @@ def test_loss_dominates_hinge_from_above_nonneg(v, h, kernel):
     assert lv >= float(losses.hinge(jnp.float32(v))) - 1e-5
 
 
+@pytest.mark.parametrize("kernel", KERNELS)
+@pytest.mark.parametrize("h", [0.1, 0.5])
+def test_jax_hessian_matches_closed_form_curvature(kernel, h):
+    """``jax.hessian`` of the node objective mean L_h(y Xb) equals the
+    closed form X^T diag(L_h'' y^2) X / n — the curvature identity the
+    rho bound (``solver.compute_rho`` via Lemma 2.1) relies on.  The
+    evaluation point is verified away from the kernels' kink sets
+    (|z| = 1 for compact support, z = 0 for the laplacian, whose loss
+    routes grad through a custom_jvp) so every family is twice
+    differentiable there."""
+    kern = losses.get_kernel(kernel)
+    rng = np.random.default_rng(3)
+    n, p = 24, 5
+    X = jnp.asarray(rng.normal(size=(n, p)), jnp.float32)
+    y = jnp.asarray(np.sign(rng.normal(size=n) + 0.2), jnp.float32)
+    beta = jnp.asarray(rng.normal(size=p) * 0.3, jnp.float32)
+
+    margins = y * (X @ beta)
+    z = (1 - margins) / h
+    assert float(jnp.min(jnp.abs(jnp.abs(z) - 1.0))) > 1e-3
+    assert float(jnp.min(jnp.abs(z))) > 1e-3
+
+    def obj(b):
+        return jnp.mean(kern.loss(y * (X @ b), h))
+
+    H_auto = jax.hessian(obj)(beta)
+    w = kern.ddloss(margins, h) * y**2
+    H_closed = (X.T * w) @ X / n
+    np.testing.assert_allclose(np.asarray(H_auto), np.asarray(H_closed),
+                               rtol=1e-4, atol=1e-4)
+
+    # and the rho bound really does dominate the curvature at this point
+    lmax_H = float(jnp.max(jnp.linalg.eigvalsh(H_auto)))
+    lmax_X = float(jnp.max(jnp.linalg.eigvalsh(X.T @ X / n)))
+    assert lmax_H <= kern.lipschitz(h) * lmax_X * (1 + 1e-4)
+
+
 def test_default_bandwidth_rule():
     h = losses.default_bandwidth(2000, 100)
     assert abs(h - max((np.log(100) / 2000) ** 0.25, 0.05)) < 1e-12

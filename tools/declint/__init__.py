@@ -15,7 +15,11 @@ from typing import List, Optional, Sequence, Set
 
 from tools.declint.core import (EXEMPT, ModuleInfo, Violation, apply_waivers,
                                 check_exempt_list, is_exempt, iter_py_files)
-from tools.declint.rules import MESH_PATH, R6MeshAxes, default_rules
+from tools.declint.rules import (MESH_PATH, R6MeshAxes, default_rules,
+                                 relaxed_rules)
+
+#: directory names linted with the relaxed tier (R2/R5/R7 only)
+RELAXED_DIRS = ("tests", "benchmarks")
 
 __all__ = ["EXEMPT", "Violation", "lint_paths", "lint_source",
            "load_allowed_axes"]
@@ -31,18 +35,22 @@ def load_allowed_axes(root: Path) -> Optional[Set[str]]:
 
 
 def lint_source(source: str, path: str = "snippet.py",
-                allowed_axes: Optional[Set[str]] = None) -> List[Violation]:
+                allowed_axes: Optional[Set[str]] = None,
+                relaxed: bool = False) -> List[Violation]:
     """Lint one source string (the unit-test entry point).  ``path`` is the
-    virtual repo-relative path the path-scoped rules (R1/R2/R6) see."""
+    virtual repo-relative path the path-scoped rules (R1/R2/R6) see;
+    ``relaxed`` selects the tests//benchmarks/ tier (R2/R5/R7 only)."""
     mod = ModuleInfo(path, source)
     found: List[Violation] = []
-    for rule in default_rules(allowed_axes):
+    for rule in (relaxed_rules() if relaxed else default_rules(allowed_axes)):
         found.extend(rule.check(mod))
     return sorted(apply_waivers(mod, found), key=lambda v: (v.line, v.rule))
 
 
 def lint_paths(roots: Sequence[Path]) -> List[Violation]:
-    """Lint every non-exempt .py file under the given roots."""
+    """Lint every non-exempt .py file under the given roots.  Roots named
+    ``tests``/``benchmarks`` (or files inside them) get the relaxed tier —
+    R2/R5/R7 only."""
     out: List[Violation] = []
     for root in roots:
         root = Path(root)
@@ -50,8 +58,9 @@ def lint_paths(roots: Sequence[Path]) -> List[Violation]:
             files, base = [root], root.parent
         else:
             files, base = list(iter_py_files(root)), root
+        relaxed = any(part in RELAXED_DIRS for part in root.parts)
         axes = load_allowed_axes(base)
-        rules = default_rules(axes)
+        rules = relaxed_rules() if relaxed else default_rules(axes)
         if (base / "repro").exists():
             for stale in check_exempt_list(base):
                 out.append(Violation(

@@ -14,8 +14,11 @@ def main(argv=None) -> int:
         prog="python -m tools.declint",
         description="Repo-specific static analysis for the deCSVM "
                     "solver/kernel stack (see tools/declint/README.md).")
-    ap.add_argument("paths", nargs="*", default=["src"],
-                    help="files or directories to lint (default: src)")
+    ap.add_argument("paths", nargs="*",
+                    default=["src", "tests", "benchmarks"],
+                    help="files or directories to lint (default: src tests "
+                         "benchmarks; tests//benchmarks/ get the relaxed "
+                         "R2/R5/R7 tier)")
     ap.add_argument("--list-rules", action="store_true",
                     help="print the rule catalogue and exit")
     args = ap.parse_args(argv)

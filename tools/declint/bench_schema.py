@@ -101,6 +101,44 @@ def validate(doc, name: Optional[str] = None) -> List[str]:
             if not isinstance(ok, bool):
                 problems.append(f"criteria[{gate!r}] must be a bool pass/"
                                 f"fail gate, got {ok!r}")
+
+    problems.extend(_check_speedup_provenance(doc, speedups))
+    return problems
+
+
+def _timing_leaves(doc) -> List[float]:
+    """Every leaf timing in end_to_end_s / steady_state_s (one nesting
+    level of per-split breakdowns included)."""
+    leaves: List[float] = []
+    for key in ("end_to_end_s", "steady_state_s"):
+        timings = doc.get(key)
+        if not isinstance(timings, dict):
+            continue
+        for secs in timings.values():
+            vals = secs.values() if isinstance(secs, dict) else (secs,)
+            leaves.extend(v for v in vals if _is_finite_pos(v))
+    return leaves
+
+
+def _check_speedup_provenance(doc, speedups, rel_tol: float = 1e-3
+                              ) -> List[str]:
+    """Every headline ``speedup_*`` must be *derivable* from the artifact:
+    equal (within ``rel_tol``) to a ratio of two recorded timing leaves.
+    A speedup no pair of timings explains is either hand-edited or
+    computed from measurements the bench then dropped — both invalidate
+    the artifact as the ROADMAP's evidence trail."""
+    leaves = _timing_leaves(doc)
+    problems: List[str] = []
+    for key, s in speedups.items():
+        if not _is_finite_pos(s) or not leaves:
+            continue  # already reported above
+        ok = any(abs(a / b - s) <= rel_tol * s
+                 for a in leaves for b in leaves if a is not b)
+        if not ok:
+            problems.append(
+                f"{key!r} = {s} matches no ratio of recorded timings "
+                f"(rel tol {rel_tol}) — speedups must be derivable from "
+                "end_to_end_s / steady_state_s leaves")
     return problems
 
 

@@ -472,7 +472,64 @@ class R8CachedBuilder(Rule):
         return has_shard_map and has_jit
 
 
+class R9InterpretLiteral(Rule):
+    """No hard-coded ``interpret=True`` outside tests/ and benchmarks/.
+
+    A literal ``interpret=True`` — as a call keyword or a function
+    parameter default — silently runs the Pallas kernel under the
+    (orders-of-magnitude slower) interpreter when the process lands on a
+    TPU.  Production code resolves ``interpret=None`` through
+    ``jax.default_backend() != "tpu"`` (``kernels.ops._default_interpret``);
+    tests and benchmarks, which pin CPU, may hard-code it (this rule is
+    strict-tier only, so the relaxed tier never runs it there).
+    """
+    id = "R9"
+    doc = "no hard-coded interpret=True outside tests/ and benchmarks/"
+
+    def check(self, mod: ModuleInfo) -> Iterable[Violation]:
+        out: List[Violation] = []
+
+        def lit_true(node) -> bool:
+            return isinstance(node, ast.Constant) and node.value is True
+
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call):
+                for kw in node.keywords:
+                    if kw.arg == "interpret" and lit_true(kw.value):
+                        out.append(Violation(
+                            mod.path, node.lineno, self.id,
+                            "literal interpret=True in a call — pass "
+                            "interpret=None and resolve it via "
+                            "jax.default_backend() (ops._default_interpret)"
+                            " so TPU runs compile"))
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                a = node.args
+                pairs = list(zip(a.kwonlyargs, a.kw_defaults))
+                pos = a.args + a.posonlyargs
+                pairs += list(zip(pos[len(pos) - len(a.defaults):],
+                                  a.defaults))
+                for arg, default in pairs:
+                    if arg is not None and arg.arg == "interpret" \
+                            and lit_true(default):
+                        out.append(Violation(
+                            mod.path, node.lineno, self.id,
+                            f"{node.name} defaults interpret=True — "
+                            "default to None and resolve via "
+                            "jax.default_backend() so TPU runs compile"))
+        return out
+
+
 def default_rules(allowed_axes: Optional[Set[str]] = None) -> Sequence[Rule]:
     return (R1ProxHome(), R2KernelDotPrecision(), R3RhoBeforeCast(),
             R4TracerBranch(), R5KernelCollectives(), R6MeshAxes(allowed_axes),
-            R7HostMathInTraced(), R8CachedBuilder())
+            R7HostMathInTraced(), R8CachedBuilder(), R9InterpretLiteral())
+
+
+def relaxed_rules() -> Sequence[Rule]:
+    """The tests//benchmarks/ tier: only the rules whose violations are
+    bugs *anywhere* — kernel-dot precision (R2), collectives inside kernel
+    bodies (R5), host math in traced scope (R7).  Prox re-derivations,
+    tracer branches, axis vocab, builder caching, and interpret literals
+    are all legitimate in test oracles and CPU-pinned benchmarks."""
+    return (R2KernelDotPrecision(), R5KernelCollectives(),
+            R7HostMathInTraced())

@@ -1,0 +1,73 @@
+"""jaxtrace — IR-level contract analysis over every driver's jaxpr.
+
+`tools/declint` lints what the *source* says; this package checks what
+the compiler actually *traces*.  Every public driver entry point (the
+13-driver parity matrix, the bf16 megakernel mode, the mesh path engine,
+and the fit-serving bucket program) is traced at small abstract shapes
+via `jax.make_jaxpr`, the ClosedJaxpr tree is walked recursively
+(`walk.py`), and IR contracts are enforced (`contracts.py`) alongside an
+IR-derived cost model with a roofline drift gate (`costmodel.py`).
+
+Run `python -m tools.jaxtrace` (CI lint job does); see README.md for
+the contract catalogue and `repro.core.sanitize` for the runtime half.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Dict, List, Optional, Tuple
+
+from tools.jaxtrace import contracts, costmodel, drivers, walk  # noqa: F401
+from tools.jaxtrace.contracts import Finding  # noqa: F401
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[2]
+
+
+def run_report(bench_path: Optional[pathlib.Path] = None,
+               names: Optional[List[str]] = None,
+               ) -> Tuple[Dict, List[Finding], List[str]]:
+    """Trace every registered driver, run all contracts, build the
+    contract/cost table, and (if the bench artifact exists) the roofline
+    drift gate.  Returns (report dict, kept findings, gate/W0 errors)."""
+    import jax
+
+    reg = drivers.build_registry()
+    if names:
+        reg = {k: v for k, v in reg.items() if k in names}
+    report: Dict = {
+        "jax_version": jax.__version__,
+        "device_count": jax.device_count(),
+        "shapes": {"m": drivers.M, "n": drivers.N, "p": drivers.P,
+                   "grid": drivers.L, "bucket": drivers.NB,
+                   "iters": drivers.ITERS},
+        "drivers": {},
+    }
+    all_findings: List[Finding] = []
+    for name, drv in reg.items():
+        closed = drivers.trace(drv)
+        found = contracts.check_driver(name, closed, bf16=drv.bf16)
+        all_findings.extend(found)
+        report["drivers"][name] = {
+            "bf16": drv.bf16,
+            "parity_driver": name in drivers.PARITY_DRIVERS,
+            "findings": [f.format() for f in found],
+            "cost": costmodel.summarize(closed),
+        }
+
+    kept, matched = contracts.apply_waivers(all_findings)
+    errors = contracts.audit_waivers(matched)
+
+    if bench_path is None:
+        bench_path = REPO_ROOT / "BENCH_megakernel.json"
+    if bench_path.exists():
+        bench = json.loads(bench_path.read_text())
+        drift = costmodel.roofline_gate(bench)
+        report["roofline_gate"] = {
+            "bench": bench_path.name,
+            "ok": not drift,
+            "errors": drift,
+        }
+        errors.extend(drift)
+    report["findings_total"] = len(all_findings)
+    report["findings_kept"] = len(kept)
+    return report, kept, errors

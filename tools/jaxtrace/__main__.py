@@ -1,0 +1,81 @@
+"""CLI: `python -m tools.jaxtrace [--out jaxtrace_contracts.json]`.
+
+Exit 0 iff every IR contract holds over every registered driver AND the
+roofline block in BENCH_megakernel.json matches its IR re-derivation.
+Writes the contract/cost table as a JSON artifact (CI uploads it).
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+# Environment must be pinned BEFORE jax is imported: CPU platform, and 4
+# forced host devices so the sharded/mesh drivers trace a real
+# multi-device mesh binding (single-device meshes still trace, but the
+# axis-resolution contract is stronger with actual sharding).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=4").strip()
+
+import argparse
+import json
+import pathlib
+
+_ROOT = pathlib.Path(__file__).resolve().parents[2]
+try:  # repo checkout without `pip install -e .`: fall back to src/
+    import repro  # noqa: F401
+except ImportError:
+    sys.path.insert(0, str(_ROOT / "src"))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.jaxtrace",
+        description="IR-level contract analysis over every driver's jaxpr")
+    ap.add_argument("--out", default="jaxtrace_contracts.json",
+                    help="contract table JSON artifact path")
+    ap.add_argument("--bench", default=str(_ROOT / "BENCH_megakernel.json"),
+                    help="bench artifact for the roofline drift gate")
+    ap.add_argument("--driver", action="append", default=None,
+                    help="restrict to named driver(s); default: all")
+    args = ap.parse_args(argv)
+
+    from tools import jaxtrace
+
+    report, findings, errors = jaxtrace.run_report(
+        bench_path=pathlib.Path(args.bench), names=args.driver)
+
+    cols = ("eqns", "max_subjaxpr_depth", "pallas_calls", "collectives",
+            "dot_flops", "dynamic_loops")
+    print(f"jaxtrace: {len(report['drivers'])} drivers traced "
+          f"(jax {report['jax_version']}, "
+          f"{report['device_count']} devices)")
+    header = f"{'driver':<22}" + "".join(f"{c:>20}" for c in cols)
+    print(header)
+    for name, row in report["drivers"].items():
+        cost = row["cost"]
+        print(f"{name:<22}" + "".join(f"{cost[c]:>20}" for c in cols))
+    gate = report.get("roofline_gate")
+    if gate:
+        print(f"roofline gate vs {gate['bench']}: "
+              f"{'OK' if gate['ok'] else 'DRIFT'}")
+
+    pathlib.Path(args.out).write_text(json.dumps(report, indent=2) + "\n")
+    print(f"contract table written to {args.out}")
+
+    for f in findings:
+        print(f"CONTRACT VIOLATION: {f.format()}", file=sys.stderr)
+    for e in errors:
+        print(f"ERROR: {e}", file=sys.stderr)
+    if findings or errors:
+        print(f"jaxtrace: {len(findings)} contract violation(s), "
+              f"{len(errors)} gate error(s)", file=sys.stderr)
+        return 1
+    print("jaxtrace: all IR contracts hold")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,284 @@
+"""IR-level contracts over driver jaxprs.
+
+These are the invariants `tools/declint` (AST level) can only
+approximate, enforced on what `jax.make_jaxpr` actually traced:
+
+- **F64**  (contract a): no float64/complex128 abstract value anywhere in
+  any driver — x64 is off repo-wide; a f64 aval means a literal or host
+  value slipped through and will silently downcast (or double every
+  buffer if x64 is ever enabled).
+- **BF16_DOT** (contract b): in `megakernel_bf16` mode every
+  `dot_general` with a bf16 operand must carry
+  `preferred_element_type=float32` — *including dots synthesized by jnp
+  helpers and vmap batching*, which declint R2 cannot see because they
+  do not exist in the source.
+- **BF16_ACCUM** (contract b): no bf16 aval in any accumulator position:
+  scan/while loop carries, `pallas_call` outputs, or reduction outputs.
+  B/P/dual/KKT-stat/rho/omega all thread through these positions, so
+  this is the IR statement of "only X is bf16".
+- **PALLAS_COLLECTIVE** (contract c): no collective primitive inside a
+  `pallas_call` body (R5's IR twin — catches collectives reached through
+  helper calls the AST rule cannot resolve).
+- **AXIS_NAME** (contract c): every collective's axis name resolves
+  against a mesh axis actually in scope from an enclosing `shard_map` at
+  trace time (R6 checks the vocabulary; this checks the *binding*).
+- **CAST_ROUNDTRIP** (contract d): `convert_element_type` chains that
+  return to the original dtype (bf16 -> f32 -> bf16): either a no-op pair
+  XLA may or may not elide, or — through a narrower dtype — silent
+  precision loss.
+- **LOOP_CONST_CAST** (contract d): a `convert_element_type` inside a
+  scan/while body whose operand is loop-invariant *and at least
+  `_CHURN_MIN_ELEMS` elements*. The cast re-executes every ADMM round
+  over bytes that never change (this is also where weak-type promotions
+  materialize per round); hoist the cast out of the loop.  Sub-threshold
+  operands (jnp-internal scalar promotions, e.g. `jnp.pad`'s int32 `0`
+  fill value cast per round) are counted, not flagged — a 4-byte scalar
+  convert is not churn worth a waiver ledger.
+- **LOOP_CONST_PAD** (contract d): same hoisting argument for `pad` — a
+  loop-invariant operand (X, y, W) re-padded inside a loop body is a
+  whole-array copy per ADMM round.  The streaming engines do this by
+  design (they relaunch their kernel per round, so operands are padded
+  per launch; the fused megakernel is the resident-state answer), which
+  is what the waiver ledger below records.
+
+Waivers: `WAIVERS` maps (contract, substring-of-finding) -> reason.  A
+finding is suppressed when the substring matches its message or source
+location; a waiver with an empty reason, or one that matches nothing in
+a full run, is itself an error (same W0 semantics as declint).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Tuple
+
+import numpy as np
+
+from tools.jaxtrace import walk
+
+# Collective primitive names (jax lowers pmean to psum+div, so it never
+# appears as its own primitive).
+COLLECTIVES = frozenset({
+    "psum", "pmax", "pmin", "ppermute", "pshuffle", "all_gather",
+    "all_to_all", "reduce_scatter", "axis_index", "pgather",
+})
+
+# Reductions whose outputs act as accumulators in this codebase.
+_REDUCTIONS = frozenset({
+    "reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
+    "argmax", "argmin", "cumsum",
+})
+
+import ml_dtypes  # jax dependency; numpy alone has no bfloat16
+
+_F64 = (np.dtype("float64"), np.dtype("complex128"))
+_BF16 = np.dtype(ml_dtypes.bfloat16)
+_F32 = np.dtype("float32")
+
+# Loop-invariant casts below this element count are scalar weak-type
+# promotions from jnp internals, not material churn.
+_CHURN_MIN_ELEMS = 16
+
+# (contract, match-substring) -> mandatory reason.  Empty or unmatched
+# entries are themselves errors (checked by `audit_waivers`).
+WAIVERS: Dict[Tuple[str, str], str] = {
+    ("LOOP_CONST_PAD", "csvm_local_update"):
+        "two-pass streaming engine relaunches the kernel every round, so "
+        "operands are padded per launch by design; the fused megakernel "
+        "(csvm_round_block) is the resident-state fix",
+    ("LOOP_CONST_PAD", "csvm_round_block"):
+        "padded once per fused check-every block and amortized over the "
+        "k on-chip rounds; hoisting would thread padded state through "
+        "run_tol's while carry",
+    ("LOOP_CONST_PAD", "csvm_block_update"):
+        "sharded engine must return to XLA between launches so "
+        "collectives can run; per-launch padding is the cost of that "
+        "contract",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    driver: str
+    contract: str
+    message: str
+    where: str = ""      # primitive path and/or source line
+
+    def format(self) -> str:
+        loc = f" [{self.where}]" if self.where else ""
+        return f"{self.driver}: {self.contract}: {self.message}{loc}"
+
+
+def _aval_dtype(v):
+    aval = getattr(v, "aval", None)
+    return getattr(aval, "dtype", None)
+
+
+def _atoms(eqn):
+    return list(eqn.invars) + list(eqn.outvars)
+
+
+def _loc(eqn, ctx: walk.Ctx) -> str:
+    src = walk.source_line(eqn)
+    path = "/".join(ctx.path) or "<root>"
+    return f"{path}::{eqn.primitive.name}" + (f" @ {src}" if src else "")
+
+
+def _axis_names_of(eqn) -> List[str]:
+    names: List[str] = []
+    for key in ("axes", "axis_name", "axis_index_groups"):
+        v = eqn.params.get(key)
+        if key == "axis_index_groups" or v is None:
+            continue
+        for n in (v if isinstance(v, (tuple, list)) else (v,)):
+            if isinstance(n, str):
+                names.append(n)
+    return names
+
+
+def _carry_vars(eqn) -> List[Any]:
+    """Loop-carry positions of a scan/while equation (call-site atoms)."""
+    prim = eqn.primitive.name
+    if prim == "scan":
+        nc = eqn.params.get("num_consts", 0)
+        nk = eqn.params.get("num_carry", 0)
+        return list(eqn.invars[nc:nc + nk]) + list(eqn.outvars[:nk])
+    if prim == "while":
+        nc = (eqn.params.get("cond_nconsts", 0)
+              + eqn.params.get("body_nconsts", 0))
+        return list(eqn.invars[nc:]) + list(eqn.outvars)
+    return []
+
+
+def check_driver(name: str, closed, *, bf16: bool = False) -> List[Finding]:
+    """Run contracts (a)-(d) over one traced driver."""
+    out: List[Finding] = []
+    for jaxpr, ctx in walk.iter_jaxprs(closed):
+        producers = {}
+        for eqn in jaxpr.eqns:
+            for v in eqn.outvars:
+                producers[id(v)] = eqn
+        for eqn in jaxpr.eqns:
+            prim = eqn.primitive.name
+
+            # (a) no f64 anywhere
+            for v in _atoms(eqn):
+                dt = _aval_dtype(v)
+                if dt is not None and dt in _F64:
+                    out.append(Finding(name, "F64",
+                                       f"{dt} aval in `{prim}`",
+                                       _loc(eqn, ctx)))
+                    break
+
+            # (b) bf16 dot discipline + accumulator dtypes
+            if bf16:
+                if prim == "dot_general":
+                    in_dts = [_aval_dtype(v) for v in eqn.invars]
+                    if _BF16 in in_dts:
+                        pref = eqn.params.get("preferred_element_type")
+                        out_dt = _aval_dtype(eqn.outvars[0])
+                        if (pref is None
+                                or np.dtype(pref) != _F32
+                                or out_dt != _F32):
+                            out.append(Finding(
+                                name, "BF16_DOT",
+                                "dot_general touches bf16 without f32 "
+                                f"preferred_element_type (pref={pref}, "
+                                f"out={out_dt})", _loc(eqn, ctx)))
+                carry_like = _carry_vars(eqn)
+                if prim == "pallas_call" or prim in _REDUCTIONS:
+                    carry_like += list(eqn.outvars)
+                for v in carry_like:
+                    if _aval_dtype(v) == _BF16:
+                        kind = ("loop carry" if prim in ("scan", "while")
+                                else "output")
+                        out.append(Finding(
+                            name, "BF16_ACCUM",
+                            f"bf16 aval in accumulator position "
+                            f"({prim} {kind})", _loc(eqn, ctx)))
+                        break
+
+            # (c) collectives: placement and axis binding
+            if prim in COLLECTIVES:
+                if ctx.inside_pallas:
+                    out.append(Finding(
+                        name, "PALLAS_COLLECTIVE",
+                        f"collective `{prim}` inside a pallas_call body",
+                        _loc(eqn, ctx)))
+                for ax in _axis_names_of(eqn):
+                    if ax not in ctx.axis_names:
+                        out.append(Finding(
+                            name, "AXIS_NAME",
+                            f"collective `{prim}` names axis {ax!r} but "
+                            f"only {sorted(ctx.axis_names)} are in scope",
+                            _loc(eqn, ctx)))
+
+            # (d) cast churn
+            if prim == "convert_element_type":
+                src_v = eqn.invars[0]
+                dst_dt = _aval_dtype(eqn.outvars[0])
+                src_dt = _aval_dtype(src_v)
+                prev = producers.get(id(src_v))
+                if (prev is not None
+                        and prev.primitive.name == "convert_element_type"):
+                    orig_dt = _aval_dtype(prev.invars[0])
+                    if orig_dt == dst_dt and orig_dt != src_dt:
+                        out.append(Finding(
+                            name, "CAST_ROUNDTRIP",
+                            f"{orig_dt} -> {src_dt} -> {dst_dt} "
+                            "convert chain", _loc(eqn, ctx)))
+                src_elems = int(np.prod(getattr(src_v.aval, "shape", ()) or
+                                        (1,)))
+                if (ctx.in_loop and src_dt != dst_dt
+                        and id(src_v) in ctx.const_vars
+                        and src_elems >= _CHURN_MIN_ELEMS):
+                    out.append(Finding(
+                        name, "LOOP_CONST_CAST",
+                        f"loop-invariant {src_dt}{tuple(src_v.aval.shape)} "
+                        f"operand cast to {dst_dt} inside a loop body "
+                        "(re-executed every round; hoist it)",
+                        _loc(eqn, ctx)))
+
+            # (d) pad churn: whole-array copy of a loop-invariant operand
+            # re-executed every round
+            if prim == "pad" and ctx.in_loop:
+                src_v = eqn.invars[0]
+                shape = getattr(getattr(src_v, "aval", None), "shape", None)
+                src_elems = int(np.prod(shape or (1,)))
+                if (id(src_v) in ctx.const_vars
+                        and src_elems >= _CHURN_MIN_ELEMS):
+                    dt = _aval_dtype(src_v)
+                    out.append(Finding(
+                        name, "LOOP_CONST_PAD",
+                        f"loop-invariant {dt}{tuple(shape)} operand "
+                        "re-padded inside a loop body (whole-array copy "
+                        "every round; hoist or keep it resident)",
+                        _loc(eqn, ctx)))
+    return out
+
+
+def apply_waivers(findings: List[Finding]) -> Tuple[List[Finding], set]:
+    """Drop waived findings; return (kept, matched waiver keys)."""
+    kept, matched = [], set()
+    for f in findings:
+        hit = None
+        for (contract, substr), _reason in WAIVERS.items():
+            if contract == f.contract and (substr in f.message
+                                           or substr in f.where):
+                hit = (contract, substr)
+                break
+        if hit is None:
+            kept.append(f)
+        else:
+            matched.add(hit)
+    return kept, matched
+
+
+def audit_waivers(matched: set) -> List[str]:
+    """W0 semantics: reasonless or stale waivers are errors."""
+    errors = []
+    for key, reason in WAIVERS.items():
+        if not str(reason).strip():
+            errors.append(f"W0: waiver {key} has no reason")
+        if key not in matched:
+            errors.append(f"W0: waiver {key} matched no finding (stale)")
+    return errors

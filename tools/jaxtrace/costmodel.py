@@ -1,0 +1,161 @@
+"""IR-derived FLOPs/bytes cost model, and the roofline drift gate.
+
+The contract table's cost columns come from the jaxpr itself: every
+`dot_general`'s FLOPs fall out of its dimension_numbers and operand
+avals (2 * batch * M * N * K), elementwise FLOPs from output aval sizes,
+and both are scaled by the product of enclosing *static* scan lengths.
+`while` bodies have trace-unknown trip counts, so their contributions
+are reported per-iteration and the driver row is marked `dynamic_loops`.
+
+The drift gate re-derives `BENCH_megakernel.json`'s roofline block from
+first principles at the recorded bench shapes: one jnp-backend ADMM
+round is traced and its IR dot-FLOPs must equal `flops_per_round`
+*exactly* (4mnp + 4m^2p: margins, X^T w, and the two dense W@B
+neighbour sums), streaming bytes must match the X + 4-state-array
+formula, and the VMEM residency fields must match
+`kernels.csvm_update.megakernel_vmem_bytes` byte-for-byte.  A hand
+edit of the BENCH file — or a solver change that alters per-round
+work — breaks the gate.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List
+
+from tools.jaxtrace import walk
+
+_ELEMENTWISE = frozenset({
+    "add", "sub", "mul", "div", "max", "min", "pow", "exp", "log",
+    "tanh", "logistic", "rsqrt", "sqrt", "abs", "sign", "neg",
+    "integer_pow", "select_n",
+})
+
+
+def dot_flops(eqn) -> int:
+    """2 * batch * M * N * K from dimension_numbers + operand avals."""
+    (lhs_c, rhs_c), (lhs_b, rhs_b) = eqn.params["dimension_numbers"]
+    lhs = eqn.invars[0].aval.shape
+    rhs = eqn.invars[1].aval.shape
+    batch = math.prod(lhs[i] for i in lhs_b)
+    k = math.prod(lhs[i] for i in lhs_c)
+    m = math.prod(d for i, d in enumerate(lhs)
+                  if i not in lhs_b and i not in lhs_c)
+    n = math.prod(d for i, d in enumerate(rhs)
+                  if i not in rhs_b and i not in rhs_c)
+    return 2 * batch * m * n * k
+
+
+def _aval_bytes(v) -> int:
+    aval = getattr(v, "aval", None)
+    if aval is None or not hasattr(aval, "shape"):
+        return 0
+    return math.prod(aval.shape) * aval.dtype.itemsize
+
+
+def summarize(closed) -> Dict:
+    """Cost/structure row for one driver's traced program."""
+    dot_fl = 0
+    dot_bytes = 0
+    elem_fl = 0
+    prims: Dict[str, int] = {}
+    pallas_calls = 0
+    collective_eqns = 0
+    dynamic_loops = 0
+    max_scale = 1
+    depth = 0
+    from tools.jaxtrace.contracts import COLLECTIVES
+    for eqn, ctx, _ in walk.iter_eqns(closed):
+        name = eqn.primitive.name
+        prims[name] = prims.get(name, 0) + 1
+        depth = max(depth, len(ctx.path))
+        max_scale = max(max_scale, ctx.loop_scale)
+        dynamic_loops = max(dynamic_loops, ctx.dynamic_loops)
+        if name == "pallas_call":
+            pallas_calls += 1
+        if name in COLLECTIVES:
+            collective_eqns += 1
+        if name == "dot_general":
+            dot_fl += dot_flops(eqn) * ctx.loop_scale
+            dot_bytes += (sum(_aval_bytes(v) for v in eqn.invars)
+                          + sum(_aval_bytes(v) for v in eqn.outvars)
+                          ) * ctx.loop_scale
+        elif name in _ELEMENTWISE:
+            elem_fl += sum(_aval_bytes(v) // max(v.aval.dtype.itemsize, 1)
+                           for v in eqn.outvars) * ctx.loop_scale
+    top = dict(sorted(prims.items(), key=lambda kv: -kv[1])[:12])
+    return {
+        "eqns": sum(prims.values()),
+        "max_subjaxpr_depth": depth,
+        "max_static_loop_scale": max_scale,
+        "dynamic_loops": dynamic_loops,
+        "pallas_calls": pallas_calls,
+        "collectives": collective_eqns,
+        "dot_flops": dot_fl,
+        "dot_bytes": dot_bytes,
+        "elementwise_flops": elem_fl,
+        "primitives_top": top,
+    }
+
+
+def round_dot_flops(m: int, n: int, p: int) -> int:
+    """IR dot-FLOPs of ONE jnp-backend ADMM round at exact shapes,
+    counted from the traced step (not a closed-form guess)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import solver
+    from repro.core.admm import ADMMConfig
+    from repro.core.graph import ring
+
+    cfg = ADMMConfig(lam=0.05, max_iter=1)
+    W = jnp.asarray(ring(m), jnp.float32)
+    X = jnp.zeros((m, n, p), jnp.float32)
+    y = jnp.ones((m, n), jnp.float32)
+    prob = solver.make_problem(X, y, W, cfg)
+    step = solver.make_step(cfg, lambda B: W @ B, W=W)
+    state = solver.init_state(prob)
+    closed = jax.make_jaxpr(
+        lambda pr, st: step(pr, st, cfg.lam))(prob, state)
+    return sum(dot_flops(eqn) * ctx.loop_scale
+               for eqn, ctx, _ in walk.iter_eqns(closed)
+               if eqn.primitive.name == "dot_general")
+
+
+def streaming_bytes_per_round(m: int, n: int, p: int) -> int:
+    """HBM traffic of one streaming (per-round relaunch) round: X read
+    once + B in/out + P in/out, fp32 (matches benchmarks/roofline.py)."""
+    return 4 * m * n * p + 4 * (4 * m * p)
+
+
+def roofline_gate(bench: Dict) -> List[str]:
+    """Cross-derive BENCH_megakernel.json's roofline block; return
+    mismatch messages (empty = gate passes)."""
+    from repro.kernels.csvm_update import megakernel_vmem_bytes
+
+    errors: List[str] = []
+    roof = bench.get("roofline")
+    cfg = bench.get("config", {})
+    if not isinstance(roof, dict):
+        return ["BENCH_megakernel.json has no roofline block"]
+    m, n, p = (int(cfg.get(k)) for k in ("m", "n", "p"))
+
+    derived = {
+        "flops_per_round": round_dot_flops(m, n, p),
+        "streaming_bytes_per_round": streaming_bytes_per_round(m, n, p),
+        "vmem_resident_bytes_fp32": megakernel_vmem_bytes(m, n, p, 4),
+        "vmem_resident_bytes_bf16": megakernel_vmem_bytes(m, n, p, 2),
+    }
+    for key, want in derived.items():
+        got = roof.get(key)
+        if got != want:
+            errors.append(
+                f"roofline drift: {key} recorded {got} but IR/formula "
+                f"derivation gives {want} at (m={m}, n={n}, p={p})")
+    ai = roof.get("arithmetic_intensity_streaming")
+    want_ai = (derived["flops_per_round"]
+               / derived["streaming_bytes_per_round"])
+    if ai is None or abs(float(ai) - want_ai) > 1e-3 * want_ai:
+        errors.append(
+            f"roofline drift: arithmetic_intensity_streaming recorded "
+            f"{ai} but flops/bytes gives {want_ai:.5f}")
+    return errors

@@ -1,0 +1,131 @@
+"""Traceable registry of every public driver entry point.
+
+Mirrors the 13-driver parity matrix of `tests/test_solver.py::_drivers`
+(the contract: those recipes ARE the public surface), plus the bf16
+megakernel mode (the reason contract (b) exists), and the two
+batch-serving programs: `decsvm_path_select_many` — the fit-serving
+bucket executor behind `serving.fit` — and the mesh path engine.
+
+Shapes are deliberately tiny (m=4, n=12, p=8, 2-point grids): tracing
+cost is what matters, not solution quality; `jax.make_jaxpr` never
+executes a round.  Sharded/mesh drivers trace against whatever CPU
+devices exist (a 1-device mesh still emits `shard_map` + collective
+equations, which is what the contracts inspect); the CLI forces 4 host
+devices before importing jax so CI traces a real multi-device binding.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, NamedTuple, Tuple
+
+M, N, P = 4, 12, 8
+L = 2          # lambda grid points
+NB = 2         # problems per serving bucket
+ITERS = 6
+LAM = 0.05
+
+#: the 13 parity drivers of tests/test_solver.py, by registry name
+PARITY_DRIVERS = (
+    "dense", "pallas", "tol", "uneven", "path-batched", "path-warm",
+    "sharded-gather", "sharded-ring", "mesh-2d", "megakernel",
+    "megakernel-tol", "megakernel-path-warm", "mesh-2d-megakernel",
+)
+
+
+class Driver(NamedTuple):
+    name: str
+    fn: Callable            # traced as jax.make_jaxpr(fn)(*args)
+    args: Tuple
+    bf16: bool              # run contract (b) on this trace
+
+
+@functools.lru_cache(maxsize=1)
+def build_registry() -> Dict[str, Driver]:
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import decentral
+    from repro.core import path as path_mod
+    from repro.core.admm import ADMMConfig, decsvm_fit
+    from repro.core.admm_adaptive import decsvm_fit_tol, decsvm_fit_uneven
+    from repro.core.graph import ring
+
+    Wn = np.asarray(ring(M), np.float32)
+    Wj = jnp.asarray(Wn)
+    lams = jnp.asarray([2 * LAM, LAM], jnp.float32)
+    lams_host = [2 * LAM, LAM]
+    mask = jnp.ones((M, N), jnp.float32)
+
+    a = ADMMConfig(lam=LAM, max_iter=ITERS)
+    pal = ADMMConfig(lam=LAM, max_iter=ITERS, use_pallas=True)
+    pz = ADMMConfig(lam=0.0, max_iter=ITERS)
+    mk = ADMMConfig(lam=LAM, max_iter=ITERS, backend="megakernel")
+    mkz = ADMMConfig(lam=0.0, max_iter=ITERS, backend="megakernel")
+    b16 = ADMMConfig(lam=LAM, max_iter=ITERS, backend="megakernel_bf16")
+
+    X = jnp.zeros((M, N, P), jnp.float32)
+    y = jnp.ones((M, N), jnp.float32)
+    Xs = jnp.zeros((NB, M, N, P), jnp.float32)
+    ys = jnp.ones((NB, M, N), jnp.float32)
+    Ws = jnp.broadcast_to(Wj, (NB, M, M))
+
+    recipes = {
+        "dense": (lambda X, y: decsvm_fit(X, y, Wj, a), (X, y), False),
+        "pallas": (lambda X, y: decsvm_fit(X, y, Wj, pal), (X, y), False),
+        "tol": (lambda X, y: decsvm_fit_tol(X, y, Wj, a, tol=1e-6,
+                                            stop_rule="kkt",
+                                            check_every=2)[0],
+                (X, y), False),
+        "uneven": (lambda X, y: decsvm_fit_uneven(X, y, mask, Wj, a),
+                   (X, y), False),
+        "path-batched": (lambda X, y: path_mod.decsvm_path_batched(
+            X, y, Wj, lams, pz), (X, y), False),
+        "path-warm": (lambda X, y: path_mod.decsvm_path_warm(
+            X, y, Wj, lams, pz, tol=1e-6, stop_rule="kkt",
+            check_every=2)[0], (X, y), False),
+        "sharded-gather": (lambda X, y: decentral.decsvm_fit_sharded(
+            X, y, Wn, a, schedule="gather"), (X, y), False),
+        "sharded-ring": (lambda X, y: decentral.decsvm_fit_sharded(
+            X, y, Wn, a, schedule="ring"), (X, y), False),
+        "mesh-2d": (lambda X, y: decentral.decsvm_path_mesh(
+            X, y, Wn, lams_host, pz, mode="batched").path, (X, y), False),
+        "megakernel": (lambda X, y: decsvm_fit(X, y, Wj, mk), (X, y), False),
+        "megakernel-tol": (lambda X, y: decsvm_fit_tol(
+            X, y, Wj, mk, tol=1e-6, stop_rule="kkt", check_every=2)[0],
+            (X, y), False),
+        "megakernel-path-warm": (lambda X, y: path_mod.decsvm_path_warm(
+            X, y, Wj, lams, mkz, tol=1e-6, stop_rule="kkt",
+            check_every=2)[0], (X, y), False),
+        "mesh-2d-megakernel": (lambda X, y: decentral.decsvm_path_mesh(
+            X, y, Wn, lams_host, mkz, mode="batched").path, (X, y), False),
+        # bf16 megakernel mode: the traces contract (b) runs on
+        "megakernel-bf16": (lambda X, y: decsvm_fit(X, y, Wj, b16),
+                            (X, y), True),
+        "megakernel-bf16-tol": (lambda X, y: decsvm_fit_tol(
+            X, y, Wj, b16, tol=1e-6, stop_rule="kkt", check_every=2)[0],
+            (X, y), True),
+        # masked fit under a bf16 config: the fused kernel has no mask
+        # operand, so this runs the streaming jnp fallback — the trace
+        # where a narrowed X would be re-upcast every round (the
+        # LOOP_CONST_CAST regression this registry exists to guard)
+        "uneven-bf16": (lambda X, y: decsvm_fit_uneven(X, y, mask, Wj, b16),
+                        (X, y), True),
+        # the fit-serving bucket executor (tuning.select_lambda_path_many
+        # jits exactly this program per bucket)
+        "serving-bucket": (lambda Xs, ys: path_mod.decsvm_path_select_many(
+            Xs, ys, Ws, lams, a, mode="warm", criterion="bic",
+            check_every=2).best_B, (Xs, ys), False),
+    }
+    return {name: Driver(name, fn, args, bf16)
+            for name, (fn, args, bf16) in recipes.items()}
+
+
+def trace(driver: Driver):
+    """ClosedJaxpr of one driver at its registry shapes."""
+    import jax
+    return jax.make_jaxpr(driver.fn)(*driver.args)
+
+
+def trace_all() -> Dict[str, Tuple[Driver, object]]:
+    reg = build_registry()
+    return {name: (d, trace(d)) for name, d in reg.items()}
