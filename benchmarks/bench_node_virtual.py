@@ -1,0 +1,214 @@
+"""Chunked node-megabatch engine benchmark, on 8 forced CPU devices:
+the virtualized node axis at m = 8 .. 1024 network nodes.
+
+Two engines over the same k-regular topology and the same fixed round
+count:
+
+  - chunked : ``decentral.decsvm_fit_chunked`` — ONE compiled program,
+              each device owning a contiguous chunk of ceil(m/8) nodes,
+              neighbour sums block-sparse (local dense dot + ring
+              ppermute for the kept off-diagonal block offsets).
+  - naive   : one-program-per-chunk host loop — per ADMM round, the
+              host computes the dense neighbour sum S = W @ B with
+              NumPy, then dispatches a jitted single-chunk one-round
+              update per chunk.  Same math (verified below), but it
+              pays ndev program launches + host transfers every round.
+
+Emits ``BENCH_node_virtual.json`` at the repo root (schema:
+``tools/declint/bench_schema.py``): steady-state wall time and analytic
+per-device operand memory vs m in {8, 64, 256, 1024}, the chunked
+speedup over naive, and parity gates — chunked vs the dense
+single-device reference at m=16 (<= 1e-5) and naive vs chunked at m=64.
+
+    PYTHONPATH=src python benchmarks/bench_node_virtual.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from pathlib import Path
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import jax                     # noqa: E402  (env must be set pre-import)
+import jax.numpy as jnp        # noqa: E402
+import numpy as np             # noqa: E402
+
+from repro.core import decentral, graph, solver  # noqa: E402
+from repro.core.admm import ADMMConfig, decsvm_fit  # noqa: E402
+
+M_LIST = (8, 64, 256, 1024)
+N, P_DIM, DEGREE, MAX_ITER = 8, 8, 4, 200
+STEADY_REPS = 5
+NAIVE_REPS = 2
+OUT = Path(__file__).resolve().parent.parent / "BENCH_node_virtual.json"
+
+
+def _problem(m: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(m, N, P_DIM)).astype(np.float32)
+    beta = np.zeros(P_DIM, np.float32)
+    beta[:3] = 1.0
+    y = np.sign(X @ beta + 0.1 * rng.normal(size=(m, N))
+                ).astype(np.float32)
+    return X, y, graph.k_regular(m, DEGREE)
+
+
+def _timed(fn, reps: int = 1):
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def _memory_per_device(m: int, ndev: int, n_offsets: int) -> int:
+    """Analytic per-device operand bytes of the chunked layout: the X/y
+    chunk, the W blocks, and the (B, P) solver state — fp32."""
+    mc = -(-m // ndev)
+    return 4 * (mc * N * P_DIM          # X chunk
+                + mc * N                # y chunk
+                + mc * mc               # W_diag block
+                + n_offsets * mc * mc   # W_off blocks
+                + 2 * mc * P_DIM)       # B, P state
+
+
+def _naive_loop_fn(X, y, top, cfg):
+    """One-program-per-chunk comparator.  Per round: a jitted primal
+    update dispatched per chunk (its neighbour-sum slice passed as an
+    operand), then the dense neighbour sum S = W @ B_new and the dual
+    accumulation on the host.  Bulk-synchronous and round-for-round the
+    same math as the fused engine (each Algorithm-1 round consumes the
+    neighbour sum twice: of B for the primal, of B_new for the dual —
+    one host GEMM per round, carried into the next round's primal).
+    Static per-chunk operands are device_put once; only the (B, P, S)
+    state pays the per-round host round-trip the fused engine avoids."""
+    m, _, p = X.shape
+    ndev = len(jax.devices())
+    mc = -(-m // ndev)
+    W = top.to_dense()
+    deg = top.degrees().astype(np.float32)
+    rho = np.asarray(solver.compute_rho(jnp.asarray(X), cfg.h, cfg.kernel,
+                                        cfg.rho_safety))
+    omega = (1.0 / (2.0 * cfg.tau * deg + rho + cfg.lam0)).astype(np.float32)
+    lam_vec = jnp.full((p,), cfg.lam, jnp.float32)
+
+    @jax.jit
+    def primal(Xc, yc, Bc, Pc, Sc, degc, rhoc, omegac):
+        neigh = cfg.tau * (degc[:, None] * Bc + Sc)
+        return jax.vmap(
+            lambda Xl, yl, bl, pl, nl, rl, wl: solver.local_update(
+                Xl, yl, bl, pl, nl, rl, wl, lam_vec, h=cfg.h,
+                kernel=cfg.kernel))(Xc, yc, Bc, Pc, neigh, rhoc, omegac)
+
+    bounds = [(c * mc, min((c + 1) * mc, m)) for c in range(ndev)
+              if c * mc < m]
+    chunks = [tuple(jnp.asarray(a[lo:hi])
+                    for a in (X, y, deg, rho, omega))
+              for lo, hi in bounds]
+
+    def loop():
+        B = np.zeros((m, p), np.float32)
+        Pd = np.zeros((m, p), np.float32)
+        S = W @ B
+        for _ in range(MAX_ITER):
+            for (lo, hi), (Xc, yc, degc, rhoc, omegac) in zip(bounds,
+                                                              chunks):
+                B[lo:hi] = np.asarray(primal(Xc, yc, B[lo:hi], Pd[lo:hi],
+                                             S[lo:hi], degc, rhoc,
+                                             omegac))
+            S = W @ B
+            Pd += cfg.tau * (deg[:, None] * B - S)
+        return B
+
+    return loop
+
+
+def run() -> dict:
+    assert len(jax.devices()) == 8, jax.devices()
+    ndev = len(jax.devices())
+    cfg = ADMMConfig(lam=0.1, max_iter=MAX_ITER)
+
+    e2e, steady, memory = {}, {}, {}
+    naive_dev = None
+    for m in M_LIST:
+        X, y, top = _problem(m)
+        Xj, yj = jnp.asarray(X), jnp.asarray(y)
+
+        def chunked():
+            return decentral.decsvm_fit_chunked(Xj, yj, top, cfg)
+
+        Bc, t_first = _timed(chunked)
+        e2e[f"chunked_m{m}"] = t_first
+        _, ss = _timed(chunked, STEADY_REPS)
+        steady[f"chunked_m{m}"] = ss
+        n_off = len(top.chunk_operands(ndev)[1])
+        memory[f"chunked_m{m}"] = _memory_per_device(m, ndev, n_off)
+
+        naive = _naive_loop_fn(X, y, top, cfg)
+        Bn, t_nfirst = _timed(naive)
+        e2e[f"naive_m{m}"] = t_nfirst
+        _, nss = _timed(naive, NAIVE_REPS)
+        steady[f"naive_m{m}"] = nss
+        if m == 64:
+            naive_dev = float(np.abs(np.asarray(Bc) - Bn).max())
+        print(f"m={m:5d}  chunked {ss:8.4f}s  naive {nss:8.4f}s  "
+              f"({nss / ss:5.2f}x)  {memory[f'chunked_m{m}']/1024:.1f} "
+              f"KiB/device")
+
+    # parity gate: chunked vs the dense single-device reference at m=16
+    Xp, yp, topp = _problem(16, seed=1)
+    Bd = np.asarray(decsvm_fit(jnp.asarray(Xp), jnp.asarray(yp),
+                               jnp.asarray(topp.to_dense()), cfg))
+    Bk = np.asarray(decentral.decsvm_fit_chunked(
+        jnp.asarray(Xp), jnp.asarray(yp), topp, cfg))
+    dense_dev = float(np.abs(Bd - Bk).max())
+
+    speedup_256 = steady["naive_m256"] / steady["chunked_m256"]
+    result = {
+        "bench": "node_virtual",
+        "config": {"m_list": list(M_LIST), "n": N, "p": P_DIM,
+                   "degree": DEGREE, "max_iter": MAX_ITER,
+                   "devices": ndev, "topology": "k_regular",
+                   "backend": jax.default_backend()},
+        "end_to_end_s": e2e,
+        "steady_state_s": steady,
+        "round_ms": {k: 1e3 * v / MAX_ITER for k, v in steady.items()},
+        "memory_bytes_per_device": memory,
+        "speedup_chunked_vs_naive_m256": speedup_256,
+        "speedup_chunked_vs_naive_m1024":
+            steady["naive_m1024"] / steady["chunked_m1024"],
+        "max_abs_dev_chunked_vs_dense_m16": dense_dev,
+        "max_abs_dev_naive_vs_chunked_m64": naive_dev,
+        "criteria": {
+            "m1024_fits_on_8_devices": bool(np.isfinite(
+                steady["chunked_m1024"])),
+            "chunked_ge_2x_naive_m256": speedup_256 >= 2.0,
+            "chunked_matches_dense_1e-5": dense_dev <= 1e-5,
+        },
+    }
+    OUT.write_text(json.dumps(result, indent=2) + "\n")
+    return result
+
+
+def main() -> None:
+    result = run()
+    print(f"speedup vs naive @ m=256:  "
+          f"{result['speedup_chunked_vs_naive_m256']:.2f}x")
+    print(f"speedup vs naive @ m=1024: "
+          f"{result['speedup_chunked_vs_naive_m1024']:.2f}x")
+    print(f"parity vs dense @ m=16:    "
+          f"{result['max_abs_dev_chunked_vs_dense_m16']:.2e}")
+    print(f"naive vs chunked @ m=64:   "
+          f"{result['max_abs_dev_naive_vs_chunked_m64']:.2e}")
+    print(f"criteria: {result['criteria']}")
+    print(f"wrote {OUT}")
+
+
+if __name__ == "__main__":
+    main()

@@ -8,7 +8,7 @@ import time
 # Named single benches runnable via ``--bench`` (JSON emitters included).
 BENCHES = ("megakernel", "kernels", "iterations", "sample_size", "topology",
            "flips", "realworld", "theory", "mesh_path", "lambda_path",
-           "fit_serving")
+           "fit_serving", "node_virtual")
 
 
 def _run_one(name: str) -> None:

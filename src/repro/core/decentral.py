@@ -12,6 +12,14 @@ collective.  Each device owns m/ndev nodes; two exchange schedules:
     boundary rows; volume O(p) per round.  This is the beyond-paper,
     ICI-native schedule — on a TPU torus a ring of nodes maps onto physical
     one-hop links, exactly matching the paper's communication model.
+  - "block" (any graph, any m): the chunked node-megabatch layout — each
+    device owns a contiguous chunk of ceil(m/ndev) nodes on the
+    "node_chunk" axis, the W B neighbour sum is computed block-wise
+    (diagonal blocks as local dense dots, cross-chunk block diagonals
+    rotated in via ppermute, all-zero block diagonals skipped statically
+    from the topology's block-sparsity pattern), and m that doesn't
+    divide the chunk count pads with exact-no-op ghost nodes.  This is
+    the m >> devices path: m = 1024 networks run on 8 devices.
 
 Three engines, in increasing parallelism:
 
@@ -69,6 +77,12 @@ def make_node_mesh(n_devices: Optional[int] = None) -> Mesh:
     return jax.make_mesh((n,), ("node",))
 
 
+def make_node_chunk_mesh(n_devices: Optional[int] = None) -> Mesh:
+    """1-D ("node_chunk",) mesh for the chunked engines (m >> devices)."""
+    from repro.launch.mesh import make_node_chunk_mesh as _make
+    return _make(n_devices)
+
+
 def _neighbor_sum_fn(schedule: str, ndev: int, Wl: Optional[Array]):
     """Neighbour-sum backend for ``solver.make_step`` inside shard_map.
 
@@ -102,6 +116,53 @@ def _neighbor_sum_fn(schedule: str, ndev: int, Wl: Optional[Array]):
 def _local_problem(Xl, yl, degl, rhol, cfg, mask=None) -> solver.Problem:
     omega = 1.0 / (2.0 * cfg.tau * degl + rhol + cfg.lam0)
     return solver.Problem(Xl, yl, degl, rhol, omega, mask)
+
+
+def _block_neighbor_sum_fn(axis: str, ndev: int, Wd_l: Array,
+                           Woff_l: Array, offsets):
+    """Block-sparse chunked neighbour sum: (W B)_l with W viewed as an
+    ndev x ndev grid of (mc, mc) blocks.
+
+    The diagonal block is a local dense dot.  Cross-chunk blocks live on
+    the statically-kept ring offsets only (``offsets``, from the
+    topology's block-sparsity pattern — all-zero block diagonals are
+    skipped at trace time): a moving copy of B rotates offset-to-offset
+    via ``ppermute`` (delta shifts, so k offsets cost k hops total) and
+    each kept offset contributes one (mc, mc) x (mc, p) dot.
+
+    Wd_l: (mc, mc) local diagonal block rows; Woff_l: (K, mc, mc) local
+    rows of the K kept off-diagonal block diagonals.
+    """
+    def block_sum(Bl):
+        acc = Wd_l @ Bl
+        moving = Bl
+        prev = 0
+        for j, k in enumerate(offsets):
+            shift = k - prev
+            # device d receives from device (d + shift) % ndev, so after
+            # the permute ``moving`` on device d holds chunk (d + k)'s B
+            perm = [(s, (s - shift) % ndev) for s in range(ndev)]
+            moving = jax.lax.ppermute(moving, axis, perm)
+            acc = acc + Woff_l[j] @ moving
+            prev = k
+        return acc
+
+    return block_sum
+
+
+def _padded_omega(degl, rhol, cfg):
+    """omega = 1/(2 tau deg + rho + lam0), but 0 on all-zero padded ghost
+    rows (deg = rho = 0), where the dense formula divides by lam0 — inf
+    omega turns the ghost rows' 0 * inf update into NaN.  Real rows have
+    denom > 0, so this is bit-identical to ``_local_problem`` there."""
+    denom = 2.0 * cfg.tau * degl + rhol + cfg.lam0
+    safe = jnp.where(denom > 0, denom, 1.0)
+    return jnp.where(denom > 0, 1.0 / safe, jnp.zeros_like(denom))
+
+
+def _padded_problem(Xl, yl, degl, rhol, cfg, mask=None) -> solver.Problem:
+    return solver.Problem(Xl, yl, degl, rhol,
+                          _padded_omega(degl, rhol, cfg), mask)
 
 
 def _zero_state(shape, dtype, axes) -> solver.SolverState:
@@ -213,10 +274,16 @@ def decsvm_fit_sharded(X: Array, y: Array, W: np.ndarray, cfg: ADMMConfig,
                        lam_weights: Optional[Array] = None) -> Array:
     """Run Algorithm 1 with node state sharded across devices.
 
-    X: (m, n, p), y: (m, n), W: (m, m).  m must divide the node-axis size.
+    X: (m, n, p), y: (m, n), W: (m, m).  m must divide the node-axis size
+    — or pass ``schedule="block"`` to run the chunked node-megabatch
+    engine (``decsvm_fit_chunked``): any m, ceil(m/ndev) nodes per
+    device, block-sparse neighbour sum.
     lam_weights: optional (p,) per-coordinate l1 multipliers (LLA stage 2).
     Returns B: (m, p) (fully replicated on exit).
     """
+    if schedule == "block":
+        return decsvm_fit_chunked(X, y, W, cfg, mesh=mesh,
+                                  lam_weights=lam_weights)
     sanitize.reject_unsupported(cfg, "decsvm_fit_sharded")
     mesh = mesh or make_node_mesh()
     m, _, p = X.shape
@@ -239,8 +306,12 @@ def decsvm_path_sharded(X: Array, y: Array, W: np.ndarray, lams,
     ``repro.core.path.score_path`` / select via the modified BIC.
     cfg.lam is ignored (the grid supplies lambda).  Every device carries
     all L grid points — see ``decsvm_path_mesh`` for the 2-D layout that
-    shards the grid too.
+    shards the grid too.  ``schedule="block"`` routes to the chunked
+    engine (``decsvm_path_chunked``): any m, nodes chunked per device.
     """
+    if schedule == "block":
+        return decsvm_path_chunked(X, y, W, lams, cfg, mesh=mesh,
+                                   lam_weights=lam_weights)
     sanitize.reject_unsupported(cfg, "decsvm_path_sharded")
     mesh = mesh or make_node_mesh()
     m, _, p = X.shape
@@ -251,6 +322,197 @@ def decsvm_path_sharded(X: Array, y: Array, W: np.ndarray, lams,
     y = jax.device_put(y, node_sharded)
     fitted = build_sharded_path(m, p, int(lams.shape[0]), cfg, mesh, schedule)
     return fitted(X, y, Wj, deg, rho, lams, _lamw(lam_weights, p, jnp.float32))
+
+
+# --------------------------------------------------------------------------
+# Chunked node-megabatch engine (schedule="block"): m >> devices
+# --------------------------------------------------------------------------
+
+
+def _as_topology(W):
+    from repro.core import graph  # local import: avoid cycle
+    if isinstance(W, graph.BlockTopology):
+        return W
+    return graph.BlockTopology.from_dense(np.asarray(W))
+
+
+def _chunk_prep(X, y, W, cfg, mesh):
+    """Pad (X, y) with all-zero ghost nodes to m_pad = ceil(m/ndev)*ndev
+    and build the block-sparse neighbour-sum operands, device-placed on
+    the ("node_chunk",) mesh.  Ghost rows (X = 0, y = 0, W rows and
+    columns 0) are exact fixed points of the Algorithm-1 update: deg =
+    rho = 0 and omega = 0 (``_padded_omega``), so their B and P stay
+    identically zero through every round — no sample mask needed, which
+    keeps the pallas/megakernel fast paths available for padded chunks.
+    """
+    ndev = mesh.shape["node_chunk"]
+    top = _as_topology(W)
+    m, _, _ = X.shape
+    assert top.m == m, (top.m, m)
+    W_diag, offsets, W_off = top.chunk_operands(ndev)
+    m_pad = W_diag.shape[0]
+    pad = m_pad - m
+    Xp = jnp.pad(jnp.asarray(X, jnp.float32), ((0, pad), (0, 0), (0, 0)))
+    yp = jnp.pad(jnp.asarray(y, jnp.float32), ((0, pad), (0, 0)))
+    deg = np.zeros((m_pad,), np.float32)
+    deg[:m] = top.degrees()
+    nmask = np.zeros((m_pad,), np.float32)
+    nmask[:m] = 1.0
+    rho = solver.compute_rho(Xp, cfg.h, cfg.kernel, cfg.rho_safety)
+    cs = NamedSharding(mesh, P("node_chunk"))
+    ops = dict(
+        X=jax.device_put(Xp.astype(solver.problem_dtype(cfg)), cs),
+        y=jax.device_put(yp, cs),
+        W_diag=jax.device_put(jnp.asarray(W_diag), cs),
+        W_off=jax.device_put(jnp.asarray(W_off),
+                             NamedSharding(mesh, P(None, "node_chunk"))),
+        deg=jax.device_put(jnp.asarray(deg), cs),
+        rho=jax.device_put(rho, cs),
+        nmask=jax.device_put(jnp.asarray(nmask), cs),
+    )
+    return ops, offsets, m_pad
+
+
+@functools.lru_cache(maxsize=64)
+def build_chunked_admm(m_pad: int, p: int, cfg: ADMMConfig, mesh: Mesh,
+                       offsets, tol: Optional[float] = None,
+                       stop_rule: str = "kkt", check_every: int = 4):
+    """Jitted chunked ADMM loop: ceil(m/ndev) nodes per device, the
+    round body vmapped over the chunk by ``solver.make_step`` (the
+    megakernel ``csvm_block_update`` path sees the chunk-shaped X, so
+    ``megakernel_supported`` re-budgets VMEM per chunk automatically).
+
+    ``tol=None`` runs cfg.max_iter fixed rounds; with a tol the KKT (or
+    legacy progress) statistic early-stops, reduced over "node_chunk"
+    with the padded ghost rows masked out of the network means.
+
+    Returns a jitted fn (X (m_pad,n,p), y, W_diag (m_pad,mc),
+    W_off (K,m_pad,mc), deg, rho, lam_weights (p,), node_mask (m_pad,))
+    -> (B (m_pad, p), rounds).
+    """
+    ndev = mesh.shape["node_chunk"]
+    assert m_pad % ndev == 0, (m_pad, ndev)
+
+    def chunk_loop(Xl, yl, Wd, Woff, degl, rhol, lamw, nmask):
+        nbr = _block_neighbor_sum_fn("node_chunk", ndev, Wd, Woff, offsets)
+        step = solver.make_step(cfg, nbr)
+        prob = _padded_problem(Xl, yl, degl, rhol, cfg)
+        state = _zero_state((Xl.shape[0], p), Xl.dtype, ("node_chunk",))
+        if tol is None:
+            # cached-neighbour driver: one ppermute chain per round, not two
+            final = solver.run_fixed_cached(step, prob, cfg.lam, lamw,
+                                            num_iters=cfg.max_iter,
+                                            state=state)
+        else:
+            residual_fn = (solver.kkt_residual_fn(
+                cfg, axis_name="node_chunk", node_mask=nmask)
+                if stop_rule == "kkt" else None)
+            final = solver.run_tol(step, prob, cfg.lam, lamw,
+                                   max_iter=cfg.max_iter, tol=tol,
+                                   state=state, residual_fn=residual_fn,
+                                   axis_name="node_chunk",
+                                   check_every=check_every)
+        return final.B, final.t
+
+    fn = _shard_map_no_rep_check(
+        chunk_loop, mesh=mesh,
+        in_specs=(P("node_chunk"), P("node_chunk"), P("node_chunk"),
+                  P(None, "node_chunk"), P("node_chunk"), P("node_chunk"),
+                  P(), P("node_chunk")),
+        out_specs=(P("node_chunk"), P()))
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=64)
+def build_chunked_path(m_pad: int, p: int, L: int, cfg: ADMMConfig,
+                       mesh: Mesh, offsets):
+    """Chunked lambda-grid engine: the grid vmapped on top of the node
+    chunking (the block-schedule analogue of ``build_sharded_path``).
+
+    Returns a jitted fn (X, y, W_diag, W_off, deg, rho, lams (L,),
+    lam_weights (p,)) -> path (L, m_pad, p).
+    """
+    ndev = mesh.shape["node_chunk"]
+    assert m_pad % ndev == 0, (m_pad, ndev)
+
+    def chunk_loop(Xl, yl, Wd, Woff, degl, rhol, lams, lamw):
+        nbr = _block_neighbor_sum_fn("node_chunk", ndev, Wd, Woff, offsets)
+        step = solver.make_step(cfg, nbr)
+        prob = _padded_problem(Xl, yl, degl, rhol, cfg)
+        m_local = Xl.shape[0]
+
+        def fit_one(lam, B0, P0, prog0):
+            state = solver.SolverState(B0, P0, jnp.zeros((), jnp.int32),
+                                       prog0)
+            return solver.run_fixed_cached(step, prob, lam, lamw,
+                                           num_iters=cfg.max_iter,
+                                           state=state).B
+
+        sdt = jnp.promote_types(Xl.dtype, jnp.float32)
+        B0 = _pvary(jnp.zeros((L, m_local, p), sdt), ("node_chunk",))
+        P0 = _pvary(jnp.zeros((L, m_local, p), sdt), ("node_chunk",))
+        prog0 = _pvary(jnp.full((L,), jnp.inf, sdt), ("node_chunk",))
+        return jax.vmap(fit_one)(lams, B0, P0, prog0)
+
+    fn = shard_map(
+        chunk_loop, mesh=mesh,
+        in_specs=(P("node_chunk"), P("node_chunk"), P("node_chunk"),
+                  P(None, "node_chunk"), P("node_chunk"), P("node_chunk"),
+                  P(), P()),
+        out_specs=P(None, "node_chunk"))
+    return jax.jit(fn)
+
+
+def decsvm_fit_chunked(X: Array, y: Array, W, cfg: ADMMConfig,
+                       mesh: Optional[Mesh] = None,
+                       lam_weights: Optional[Array] = None,
+                       tol: Optional[float] = None,
+                       stop_rule: str = "kkt",
+                       check_every: int = 4):
+    """Run Algorithm 1 with each device owning a contiguous chunk of
+    ceil(m/ndev) nodes — m is no longer capped by the device count.
+
+    ``W`` may be a dense (m, m) adjacency or a ``graph.BlockTopology``
+    (preferred at large m: no O(m^2) host array is ever built).  m need
+    not divide the device count: the tail chunk is padded with all-zero
+    ghost nodes that stay exact no-ops (see ``_chunk_prep``).
+
+    Returns B (m, p); with ``tol`` returns (B (m, p), rounds).
+    """
+    sanitize.reject_unsupported(cfg, "decsvm_fit_chunked")
+    mesh = mesh or make_node_chunk_mesh()
+    m, _, p = X.shape
+    ops, offsets, m_pad = _chunk_prep(X, y, W, cfg, mesh)
+    fitted = build_chunked_admm(m_pad, p, cfg, mesh, offsets, tol=tol,
+                                stop_rule=stop_rule,
+                                check_every=check_every)
+    B, t = fitted(ops["X"], ops["y"], ops["W_diag"], ops["W_off"],
+                  ops["deg"], ops["rho"],
+                  _lamw(lam_weights, p, jnp.float32), ops["nmask"])
+    B = B[:m]
+    return (B, t) if tol is not None else B
+
+
+def decsvm_path_chunked(X: Array, y: Array, W, lams, cfg: ADMMConfig,
+                        mesh: Optional[Mesh] = None,
+                        lam_weights: Optional[Array] = None) -> Array:
+    """Whole lambda grid through the chunked engine (m >> devices).
+
+    Returns the path (L, m, p); score/select with
+    ``repro.core.path.score_path`` or use ``decsvm_path_mesh`` with
+    ``schedule="block"`` for fused in-program selection.
+    """
+    sanitize.reject_unsupported(cfg, "decsvm_path_chunked")
+    mesh = mesh or make_node_chunk_mesh()
+    m, _, p = X.shape
+    lams = jnp.asarray(lams, jnp.float32)
+    ops, offsets, m_pad = _chunk_prep(X, y, W, cfg, mesh)
+    fitted = build_chunked_path(m_pad, p, int(lams.shape[0]), cfg, mesh,
+                                offsets)
+    path = fitted(ops["X"], ops["y"], ops["W_diag"], ops["W_off"],
+                  ops["deg"], ops["rho"], lams,
+                  _lamw(lam_weights, p, jnp.float32))
+    return path[:, :m]
 
 
 # --------------------------------------------------------------------------
@@ -269,7 +531,8 @@ def build_mesh_path(m: int, p: int, C: int, cfg: ADMMConfig, mesh: Mesh,
                     schedule: str = "gather", mode: str = "batched",
                     tol: float = 1e-6, stop_rule: str = "kkt",
                     with_masks: bool = False, check_every: int = 4,
-                    handoff: bool = True):
+                    handoff: bool = True, offsets=(),
+                    m_real: Optional[int] = None):
     """Build the 2-D (node, lam) shard_map program.  Cached on all
     arguments (jit caches by function identity — a fresh closure per call
     would recompile every time).
@@ -304,24 +567,41 @@ def build_mesh_path(m: int, p: int, C: int, cfg: ADMMConfig, mesh: Mesh,
     like the 1-D warm path.  Cells where continuation doesn't apply
     (shard 0, fold-block boundaries) reuse their first-sweep solution, so
     the refinement sweep early-stops almost immediately.
+
+    ``schedule="block"`` runs the chunked node-megabatch layout: the
+    node mesh axis is "node_chunk", m is the *padded* node count, the W
+    operand is the ``(W_diag, W_off, node_mask)`` triple from
+    ``_chunk_prep``-style block operands (``offsets`` holds the kept
+    block diagonals), and ``m_real`` (< m when padded) corrects every
+    scoring mean for the all-zero ghost rows.
     """
     if mode not in ("warm", "batched"):
         raise ValueError(f"mode {mode!r} not in ('warm', 'batched')")
     if stop_rule not in ("kkt", "progress"):
         raise ValueError(f"stop_rule {stop_rule!r} not in ('kkt', 'progress')")
-    nn, nl = mesh.shape["node"], mesh.shape["lam"]
+    nax = "node_chunk" if schedule == "block" else "node"
+    nn, nl = mesh.shape[nax], mesh.shape["lam"]
     assert m % nn == 0, f"m={m} must be divisible by node axis={nn}"
     assert C % nl == 0, f"cells={C} must be divisible by lam axis={nl}"
+    m_real = m if m_real is None else m_real
     import math as _math
 
-    def prog(Xl, yl, Wl, degl, cell_lams, cell_rho, lamw, cell_masks=None):
-        step = solver.make_step(cfg, _neighbor_sum_fn(schedule, nn, Wl))
+    def prog(Xl, yl, Wop, degl, cell_lams, cell_rho, lamw, cell_masks=None):
+        if schedule == "block":
+            Wd, Woff, nmask = Wop
+            nbr = _block_neighbor_sum_fn(nax, nn, Wd, Woff, offsets)
+        else:
+            nmask = None
+            nbr = _neighbor_sum_fn(schedule, nn, Wop)
+        step = solver.make_step(cfg, nbr)
         m_local, n, _ = Xl.shape
         C_local = cell_lams.shape[0]
         cells = ((cell_lams, cell_rho) if cell_masks is None
                  else (cell_lams, cell_rho, cell_masks))
 
         def cell_problem(rhoc, maskc):
+            if schedule == "block":
+                return _padded_problem(Xl, yl, degl, rhoc, cfg, mask=maskc)
             return _local_problem(Xl, yl, degl, rhoc, cfg, mask=maskc)
 
         if mode == "batched":
@@ -330,34 +610,45 @@ def build_mesh_path(m: int, p: int, C: int, cfg: ADMMConfig, mesh: Mesh,
                 prob = cell_problem(rhoc, maskc)
                 state = solver.SolverState(B0, P0,
                                            jnp.zeros((), jnp.int32), prog0)
-                final = solver.run_fixed(step, prob, lam, lamw,
-                                         num_iters=cfg.max_iter, state=state)
+                run = (solver.run_fixed_cached if schedule == "block"
+                       else solver.run_fixed)
+                final = run(step, prob, lam, lamw,
+                            num_iters=cfg.max_iter, state=state)
                 return final.B, final.t
 
             sdt = jnp.promote_types(Xl.dtype, jnp.float32)
             B0 = _pvary(jnp.zeros((C_local, m_local, p), sdt),
-                        ("node", "lam"))
+                        (nax, "lam"))
             P0 = _pvary(jnp.zeros((C_local, m_local, p), sdt),
-                        ("node", "lam"))
+                        (nax, "lam"))
             prog0 = _pvary(jnp.full((C_local,), jnp.inf, sdt),
-                           ("node", "lam"))
+                           (nax, "lam"))
             path, iters = jax.vmap(fit_cell)(B0, P0, prog0, *cells)
         else:
-            residual_fn = (solver.kkt_residual_fn(cfg, axis_name="node")
+            residual_fn = (solver.kkt_residual_fn(cfg, axis_name=nax,
+                                                  node_mask=nmask)
                            if stop_rule == "kkt" else None)
+            # The block schedule's neighbour sum runs ppermute inside the
+            # while body, and XLA's CollectivePermute rendezvous spans
+            # the whole mesh — so under "block" the stop decision must be
+            # agreed across BOTH axes (uniform trip counts mesh-wide);
+            # converged lam columns keep refining until all columns stop.
+            # The sub-axis all_gather/psum of the dense schedules
+            # rendezvous per lam column, so those keep per-column stops.
+            stop_axes = (nax, "lam") if schedule == "block" else nax
             sdt = jnp.promote_types(Xl.dtype, jnp.float32)
 
             def fit_from(B_init, lam, rhoc, maskc, t0=None):
                 prob = cell_problem(rhoc, maskc)
-                P0 = _pvary(jnp.zeros((m_local, p), sdt), ("node", "lam"))
-                prog0 = _pvary(jnp.asarray(jnp.inf, sdt), ("node", "lam"))
+                P0 = _pvary(jnp.zeros((m_local, p), sdt), (nax, "lam"))
+                prog0 = _pvary(jnp.asarray(jnp.inf, sdt), (nax, "lam"))
                 t_init = (jnp.zeros((), jnp.int32) if t0 is None
                           else jnp.asarray(t0, jnp.int32))
                 state = solver.SolverState(B_init, P0, t_init, prog0)
                 return solver.run_tol(step, prob, lam, lamw,
                                       max_iter=cfg.max_iter, tol=tol,
                                       state=state, residual_fn=residual_fn,
-                                      axis_name="node",
+                                      axis_name=stop_axes,
                                       check_every=check_every)
 
             def outer(carry, cell):
@@ -373,7 +664,7 @@ def build_mesh_path(m: int, p: int, C: int, cfg: ADMMConfig, mesh: Mesh,
                 final = fit_from(B_init, lam, rhoc, maskc)
                 return (final.B, lam), (final.B, final.t)
 
-            B0 = _pvary(jnp.zeros((m_local, p), sdt), ("node", "lam"))
+            B0 = _pvary(jnp.zeros((m_local, p), sdt), (nax, "lam"))
             lam0 = jnp.asarray(jnp.inf, sdt)
             (B_last, lam_last), (path, iters) = jax.lax.scan(
                 outer, (B0, lam0), cells)
@@ -414,40 +705,49 @@ def build_mesh_path(m: int, p: int, C: int, cfg: ADMMConfig, mesh: Mesh,
                     outer2, (B_in, lam_in), cells + (path, iters))
 
         # -- fused scoring (modified BIC + held-out hinge), psum over nodes;
-        # accumulated fp32 regardless of the X compute dtype
-        N_total = m * n
+        # accumulated fp32 regardless of the X compute dtype.  Every mean
+        # uses the *real* node count: padded ghost rows have margin 0, so
+        # their hinge is 1 per sample and must be masked out (their path
+        # rows are exactly 0, so supp needs no correction).
+        N_total = m_real * n
         f32 = jnp.float32
         margins = jnp.einsum("mnp,cmp->cmn", Xl, path,
                              preferred_element_type=f32) * yl[None]
         hinge = jnp.maximum(1.0 - margins, 0.0)              # (C_local, m, n)
+        if nmask is not None:
+            hinge = hinge * nmask[None, :, None]
         if cell_masks is None:
-            hinge_in = jax.lax.psum(jnp.sum(hinge, axis=(1, 2)), "node")
+            hinge_in = jax.lax.psum(jnp.sum(hinge, axis=(1, 2)), nax)
             n_in = jnp.asarray(N_total, f32)
             val_hinge = jnp.zeros((C_local,), f32)
         else:
             hinge_in = jax.lax.psum(
-                jnp.sum(hinge * cell_masks, axis=(1, 2)), "node")
+                jnp.sum(hinge * cell_masks, axis=(1, 2)), nax)
             val = 1.0 - cell_masks
+            if nmask is not None:
+                val = val * nmask[None, :, None]
             hinge_out = jax.lax.psum(jnp.sum(hinge * val, axis=(1, 2)),
-                                     "node")
-            n_out = jax.lax.psum(jnp.sum(val, axis=(1, 2)), "node")
-            n_in = jax.lax.psum(jnp.sum(cell_masks, axis=(1, 2)), "node")
+                                     nax)
+            n_out = jax.lax.psum(jnp.sum(val, axis=(1, 2)), nax)
+            n_in = jax.lax.psum(jnp.sum(cell_masks, axis=(1, 2)), nax)
             val_hinge = hinge_out / jnp.maximum(n_out, 1.0)
         supp = jax.lax.psum(
             jnp.sum((jnp.abs(path) > 1e-8).astype(f32), axis=(1, 2)),
-            "node")
+            nax)
         bic = (hinge_in / n_in
                + _math.sqrt(_math.log(N_total)) * _math.log(p)
-               * (supp / m) / N_total)
+               * (supp / m_real) / N_total)
         scores = jnp.stack([bic, val_hinge], axis=-1)        # (C_local, 2)
         return path, scores, iters
 
-    base_specs = (P("node"), P("node"), P("node"), P("node"),
-                  P("lam"), P("lam", "node"), P())
-    in_specs = base_specs + ((P("lam", "node"),) if with_masks else ())
+    wspec = ((P(nax), P(None, nax), P(nax)) if schedule == "block"
+             else P(nax))
+    base_specs = (P(nax), P(nax), wspec, P(nax),
+                  P("lam"), P("lam", nax), P())
+    in_specs = base_specs + ((P("lam", nax),) if with_masks else ())
     fn = _shard_map_no_rep_check(
         prog, mesh=mesh, in_specs=in_specs,
-        out_specs=(P("lam", "node"), P("lam"), P("lam")))
+        out_specs=(P("lam", nax), P("lam"), P("lam")))
     return jax.jit(fn)
 
 
@@ -473,7 +773,11 @@ def decsvm_path_mesh(X: Array, y: Array, W: np.ndarray, lams,
     solution forward so continuation matches the 1-D warm path across
     shard boundaries (see ``build_mesh_path``).
 
-    Requires m % node-axis == 0 and #cells % lam-axis == 0.
+    Requires #cells % lam-axis == 0, and m % node-axis == 0 for the
+    dense schedules; ``schedule="block"`` (the chunked node-megabatch
+    layout on a ("node_chunk", "lam") mesh) takes any m — the tail chunk
+    pads with exact-no-op ghost nodes and every score is corrected to
+    the real node count.  ``W`` may then be a ``graph.BlockTopology``.
     cfg.lam is ignored (the grid supplies lambda).
     """
     from repro.core.path import PathResult  # local import: avoid cycle
@@ -484,54 +788,95 @@ def decsvm_path_mesh(X: Array, y: Array, W: np.ndarray, lams,
     L = len(lams)
     if criterion not in ("bic", "cv"):
         raise ValueError(f"criterion {criterion!r} not in ('bic', 'cv')")
+    C = L * (1 + cv_folds) if criterion == "cv" else L
+    chunked = schedule == "block"
+
+    if mesh is None:
+        nn, nl = _choose_mesh_shape(m, C, len(jax.devices()),
+                                    chunked=chunked)
+        if chunked:
+            from repro.launch.mesh import make_chunk_lam_mesh
+            mesh = make_chunk_lam_mesh(nn, nl)
+        else:
+            mesh = make_node_lam_mesh(nn, nl)
+    nax = "node_chunk" if chunked else "node"
+    nn = mesh.shape[nax]
+
+    if chunked:
+        top = _as_topology(W)
+        assert top.m == m, (top.m, m)
+        W_diag, offsets, W_off = top.chunk_operands(nn)
+        m_work = W_diag.shape[0]
+        pad = m_work - m
+        X = jnp.pad(jnp.asarray(X, jnp.float32),
+                    ((0, pad), (0, 0), (0, 0)))
+        y = jnp.pad(jnp.asarray(y, jnp.float32), ((0, pad), (0, 0)))
+        deg_np = np.zeros((m_work,), np.float32)
+        deg_np[:m] = top.degrees()
+        nmask_np = np.zeros((m_work,), np.float32)
+        nmask_np[:m] = 1.0
+        row_valid = nmask_np
+    else:
+        if schedule == "ring":
+            _assert_ring(W)
+        offsets, m_work = (), m
+        row_valid = np.ones((m,), np.float32)
 
     rho_full = solver.compute_rho(X, cfg.h, cfg.kernel, cfg.rho_safety)
     if criterion == "cv":
         from repro.core.tuning import kfold_masks  # local: avoid cycle
-        folds = kfold_masks(m, n, cv_folds, seed=cv_seed)     # (k, m, n)
-        ones = np.ones((L, m, n), np.float32)
+        folds = np.asarray(kfold_masks(m, n, cv_folds, seed=cv_seed))
+        if chunked:                        # ghost rows: mask 0 everywhere
+            folds = np.concatenate(
+                [folds, np.zeros((cv_folds, m_work - m, n), folds.dtype)],
+                axis=1)
+        ones = np.broadcast_to(row_valid[None, :, None], (L, m_work, n))
         cell_masks = jnp.asarray(np.concatenate(
-            [ones] + [np.broadcast_to(f, (L, m, n)) for f in folds]), X.dtype)
+            [ones] + [np.broadcast_to(f, (L, m_work, n)) for f in folds]),
+            X.dtype)
         cell_lams = np.concatenate([lams] * (1 + cv_folds))
         fold_rho = _fold_rhos(X, jnp.asarray(folds, X.dtype), cfg.h,
-                              cfg.kernel, cfg.rho_safety)     # (k, m)
+                              cfg.kernel, cfg.rho_safety)     # (k, m_work)
         cell_rho = jnp.concatenate(
-            [jnp.broadcast_to(rho_full, (L, m))]
-            + [jnp.broadcast_to(r, (L, m)) for r in fold_rho])
+            [jnp.broadcast_to(rho_full, (L, m_work))]
+            + [jnp.broadcast_to(r, (L, m_work)) for r in fold_rho])
     else:
         cell_masks, cell_lams = None, lams
-        cell_rho = jnp.broadcast_to(rho_full, (L, m))
-    C = len(cell_lams)
+        cell_rho = jnp.broadcast_to(rho_full, (L, m_work))
+    assert C == len(cell_lams)
 
-    if mesh is None:
-        nn, nl = _choose_mesh_shape(m, C, len(jax.devices()))
-        mesh = make_node_lam_mesh(nn, nl)
-
-    if schedule == "ring":
-        _assert_ring(W)
-    Wj = jnp.asarray(W, X.dtype)
-    deg = jnp.sum(Wj, axis=1)
+    node_s = NamedSharding(mesh, P(nax))
+    if chunked:
+        Wop = (jax.device_put(jnp.asarray(W_diag), node_s),
+               jax.device_put(jnp.asarray(W_off),
+                              NamedSharding(mesh, P(None, nax))),
+               jax.device_put(jnp.asarray(nmask_np), node_s))
+        deg = jax.device_put(jnp.asarray(deg_np), node_s)
+    else:
+        Wop = jnp.asarray(W, X.dtype)
+        deg = jnp.sum(Wop, axis=1)
 
     # X narrows to the backend's compute dtype only now — rho (above) and
     # the scoring operands stay fp32
     X_c = X.astype(solver.problem_dtype(cfg))
-    X_s = jax.device_put(X_c, NamedSharding(mesh, P("node")))
-    y_s = jax.device_put(y, NamedSharding(mesh, P("node")))
-    rho_s = jax.device_put(cell_rho, NamedSharding(mesh, P("lam", "node")))
+    X_s = jax.device_put(X_c, node_s)
+    y_s = jax.device_put(y, node_s)
+    rho_s = jax.device_put(cell_rho, NamedSharding(mesh, P("lam", nax)))
     lams_s = jax.device_put(jnp.asarray(cell_lams, jnp.float32),
                             NamedSharding(mesh, P("lam")))
-    operands = [X_s, y_s, Wj, deg, lams_s, rho_s,
+    operands = [X_s, y_s, Wop, deg, lams_s, rho_s,
                 _lamw(lam_weights, p, jnp.float32)]
     if cell_masks is not None:
         operands.append(jax.device_put(
-            cell_masks, NamedSharding(mesh, P("lam", "node"))))
+            cell_masks, NamedSharding(mesh, P("lam", nax))))
 
-    fitted = build_mesh_path(m, p, C, cfg, mesh, schedule, mode, tol,
+    fitted = build_mesh_path(m_work, p, C, cfg, mesh, schedule, mode, tol,
                              stop_rule, with_masks=cell_masks is not None,
-                             check_every=check_every, handoff=handoff)
+                             check_every=check_every, handoff=handoff,
+                             offsets=offsets, m_real=m)
     path_cells, scores, iters = fitted(*operands)
 
-    path = path_cells[:L]
+    path = path_cells[:L, :m]
     if criterion == "cv":
         criteria = jnp.mean(
             scores[L:, 1].reshape(cv_folds, L), axis=0)       # held-out hinge
@@ -542,14 +887,16 @@ def decsvm_path_mesh(X: Array, y: Array, W: np.ndarray, lams,
     return PathResult(lams_j[i], path[i], lams_j, path, criteria, iters[:L])
 
 
-def _choose_mesh_shape(m: int, C: int, ndev: int):
-    """Pick (node, lam) axis sizes: use every device, maximize balance."""
+def _choose_mesh_shape(m: int, C: int, ndev: int, chunked: bool = False):
+    """Pick (node, lam) axis sizes: use every device, maximize balance.
+    ``chunked`` drops the m-divisibility constraint (the block schedule
+    pads the tail chunk), so only the cell count restricts the split."""
     best = None
     for nn in range(1, ndev + 1):
         if ndev % nn:
             continue
         nl = ndev // nn
-        if m % nn or C % nl:
+        if (not chunked and m % nn) or C % nl:
             continue
         key = (min(nn, nl), nl)        # balanced first, then grid-parallel
         if best is None or key > best[0]:

@@ -19,11 +19,32 @@ from repro.core.graph import metropolis_weights
 Array = jax.Array
 
 
-def gossip_average(values: Array, W: np.ndarray, rounds: int = 50) -> Array:
+def metropolis_weights_jnp(W: Array) -> Array:
+    """Traced Metropolis–Hastings mixing matrix: M_ij = W_ij /
+    (1 + max(deg_i, deg_j)) off-diagonal, rows summing to 1.  Matches
+    ``graph.metropolis_weights`` (the host double loop) exactly but is
+    jit/vmap-composable — no NumPy, no O(m^2) host work per call."""
+    W = jnp.asarray(W)
+    deg = jnp.sum(W, axis=1)
+    pair_deg = jnp.maximum(deg[:, None], deg[None, :])
+    M = W / (1.0 + pair_deg)
+    diag = 1.0 - jnp.sum(M, axis=1)
+    return M + jnp.diag(diag)
+
+
+def gossip_average(values: Array, W: Array, rounds: int = 50) -> Array:
     """values: (m, ...) per-node scalars/vectors -> per-node estimates of the
-    network average after `rounds` one-hop gossip exchanges."""
-    M = jnp.asarray(metropolis_weights(np.asarray(W)))
+    network average after `rounds` one-hop gossip exchanges.
+
+    Fully traceable: ``W`` may be a device array (the mixing weights are
+    computed with jnp ops, not the host loop in ``graph.metropolis_weights``)
+    and the exchange itself is a ``lax.scan``, so the whole thing composes
+    under jit/vmap and with the chunked engines.  ``rounds`` stays static
+    (it sizes the scan).
+    """
+    M = metropolis_weights_jnp(jnp.asarray(W, jnp.float32))
     flat = values.reshape(values.shape[0], -1)
+    M = M.astype(flat.dtype)
 
     def body(v, _):
         return M @ v, None

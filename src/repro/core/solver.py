@@ -264,6 +264,26 @@ def make_step(cfg, neighbor_sum: Callable[[Array], Array], *,
         return SolverState(B_new, P_new, state.t + 1,
                            jnp.max(jnp.abs(B_new - B)))
 
+    def cached_round(prob: Problem, state: SolverState, S, lam,
+                     lam_weights: Optional[Array] = None):
+        """One round with ``S = neighbor_sum(state.B)`` supplied by the
+        caller: the dual update's exchange of B_new IS the next round's
+        primal exchange of B, so carrying it across rounds
+        (``run_fixed_cached``) halves the neighbour exchanges per round
+        — the collectives, in the sharded/chunked engines — at
+        bit-identical math (same values through the same ops)."""
+        B, P = state.B, state.P
+        neigh_term = tau * (prob.deg[:, None] * B + S)
+        lam_vec = _lam_vec(lam, lam_weights, B.shape[-1])
+        B_new = _primal(prob, B, P, neigh_term, lam_vec)
+        S_new = neighbor_sum(B_new)
+        P_new = P + tau * (prob.deg[:, None] * B_new - S_new)
+        return SolverState(B_new, P_new, state.t + 1,
+                           jnp.max(jnp.abs(B_new - B))), S_new
+
+    step.cached_round = cached_round
+    step.neighbor_sum = neighbor_sum
+
     if getattr(cfg, "sanitize", False):
         # Wrap with the E1-E6 term checks and do NOT attach round_block:
         # the fused megakernel hides exactly the per-term dataflow the
@@ -356,6 +376,33 @@ def run_fixed(step, prob: Problem, lam, lam_weights=None, *,
     return final
 
 
+def run_fixed_cached(step, prob: Problem, lam, lam_weights=None, *,
+                     num_iters: int,
+                     state: Optional[SolverState] = None) -> SolverState:
+    """``run_fixed`` through ``step.cached_round``: the neighbour sum of
+    the current iterate rides the scan carry, so every round pays ONE
+    neighbour exchange instead of two.  Bit-identical to ``run_fixed``
+    (the cached value is exactly what the second exchange would
+    recompute); the win is the halved collective count in the
+    sharded/chunked engines, where an exchange is a ``ppermute`` chain.
+    Falls back to ``run_fixed`` when ``step`` carries no ``cached_round``
+    (e.g. the sanitizer-wrapped step)."""
+    cached = getattr(step, "cached_round", None)
+    if cached is None:
+        return run_fixed(step, prob, lam, lam_weights, num_iters=num_iters,
+                         state=state)
+    state = init_state(prob) if state is None else state
+
+    def body(carry, _):
+        s, S = carry
+        new, S_new = cached(prob, s, S, lam, lam_weights)
+        return (new, S_new), None
+
+    S0 = step.neighbor_sum(state.B)
+    (final, _), _ = jax.lax.scan(body, (state, S0), None, length=num_iters)
+    return final
+
+
 def run_tol(step, prob: Problem, lam, lam_weights=None, *, max_iter: int,
             tol: float, state: Optional[SolverState] = None,
             residual_fn=None, axis_name: Optional[str] = None,
@@ -365,8 +412,15 @@ def run_tol(step, prob: Problem, lam, lam_weights=None, *, max_iter: int,
     The default statistic is iterate progress max|B_t - B_{t-1}|;
     ``residual_fn(prob, state, lam, lam_weights)`` substitutes e.g. the
     KKT residual (``kkt_residual``).  Inside ``shard_map``, pass
-    ``axis_name`` so every node shard agrees on the stop decision (the
-    statistic is pmax-reduced before the while condition reads it).
+    ``axis_name`` (one axis or a tuple) so every shard in the group
+    agrees on the stop decision: the whole continue-flag — not just the
+    statistic — is pmax-reduced and carried through the loop, so shards
+    whose (t, statistic) differ still trip-count in lockstep (any body
+    collectives keep rendezvousing).  A shard past its own budget holds
+    its rounds (collectives still execute); a shard below tol keeps
+    refining until the whole group stops.  When (t, statistic) are
+    group-uniform — every dense/1-axis driver — this is bit-identical
+    to a local stop decision.
 
     ``check_every=k`` evaluates the stop statistic only after every k-th
     round: each while-iteration runs an inner k-step scan (rounds past
@@ -386,8 +440,16 @@ def run_tol(step, prob: Problem, lam, lam_weights=None, *, max_iter: int,
     """
     state = init_state(prob) if state is None else state
 
-    def cond(state):
-        return (state.t < max_iter) & (state.progress > tol)
+    def _flag(s):
+        """Continue?  Collectively agreed across ``axis_name`` so body
+        collectives stay aligned (no group member may exit early)."""
+        f = (s.t < max_iter) & (s.progress > tol)
+        if axis_name is not None:
+            f = jax.lax.pmax(f.astype(jnp.int32), axis_name) > 0
+        return f
+
+    def cond(carry):
+        return carry[1]
 
     def stat(new):
         if residual_fn is not None:
@@ -400,13 +462,16 @@ def run_tol(step, prob: Problem, lam, lam_weights=None, *, max_iter: int,
                  and (residual_fn is None
                       or getattr(residual_fn, "kind", None) == "kkt"))
 
-    def fused_body(state):
+    def fused_body(carry):
+        state = carry[0]
         nact = jnp.minimum(check_every, max_iter - state.t)
-        return round_block(prob, state, lam, lam_weights,
-                           num_rounds=check_every, rounds_active=nact,
-                           want_kkt=residual_fn is not None)
+        new = round_block(prob, state, lam, lam_weights,
+                          num_rounds=check_every, rounds_active=nact,
+                          want_kkt=residual_fn is not None)
+        return new, _flag(new)
 
-    def body(state):
+    def body(carry):
+        state = carry[0]
         if check_every > 1:
             def inner(s, _):
                 stepped = step(prob, s, lam, lam_weights)
@@ -416,25 +481,33 @@ def run_tol(step, prob: Problem, lam, lam_weights=None, *, max_iter: int,
 
             new, _ = jax.lax.scan(inner, state, None, length=check_every)
         else:
-            new = step(prob, state, lam, lam_weights)
+            stepped = step(prob, state, lam, lam_weights)
+            new = (stepped if axis_name is None else jax.tree.map(
+                lambda a, b: jnp.where(state.t < max_iter, a, b),
+                stepped, state))
         new = new._replace(progress=stat(new))
         if axis_name is not None:
             new = new._replace(
                 progress=jax.lax.pmax(new.progress, axis_name))
-        return new
+        return new, _flag(new)
 
-    return jax.lax.while_loop(cond, fused_body if use_fused else body, state)
+    final, _ = jax.lax.while_loop(cond, fused_body if use_fused else body,
+                                  (state, _flag(state)))
+    return final
 
 
-def kkt_residual_fn(cfg, axis_name: Optional[str] = None):
+def kkt_residual_fn(cfg, axis_name: Optional[str] = None,
+                    node_mask: Optional[Array] = None):
     """Adapter factory: the ``residual_fn`` shape ``run_tol`` expects,
     closing over cfg (and the mesh axis for sharded drivers).  Shared by
     every KKT-stopping driver so the adapter exists once.  ``fn.kind``
     tags the statistic so ``run_tol`` knows the megakernel's in-pass KKT
-    epilogue computes the same quantity and may fuse it."""
+    epilogue computes the same quantity and may fuse it.  ``node_mask``
+    (per-row validity, for the chunked engine's padded ghost nodes) may
+    be a traced shard — the closure keeps it row-aligned with B."""
     def fn(prob, state, lam, lam_weights):
         return kkt_residual(prob, cfg, state.B, lam, lam_weights,
-                            axis_name=axis_name)
+                            axis_name=axis_name, node_mask=node_mask)
     fn.kind = "kkt"
     if getattr(cfg, "sanitize", False):
         from repro.core import sanitize
@@ -444,7 +517,8 @@ def kkt_residual_fn(cfg, axis_name: Optional[str] = None):
 
 def kkt_residual(prob: Problem, cfg, B: Array, lam,
                  lam_weights: Optional[Array] = None, *,
-                 axis_name: Optional[str] = None) -> Array:
+                 axis_name: Optional[str] = None,
+                 node_mask: Optional[Array] = None) -> Array:
     """KKT/duality-gap stop statistic for the network problem (eq. 3/4).
 
     Measures actual optimality of the network-average iterate rather than
@@ -465,10 +539,22 @@ def kkt_residual(prob: Problem, cfg, B: Array, lam,
 
     Returns max(stationarity, consensus).  Inside ``shard_map`` pass the
     node ``axis_name``; node means/maxes then reduce over the mesh axis.
+    ``node_mask`` (0/1 per row of B) restricts every node mean/max to
+    real nodes — the chunked engine's zero-padded ghost rows carry zero
+    grads and zero B but must not dilute the network means.
     """
-    local_mean = jnp.mean(B, axis=0)
-    beta_bar = (local_mean if axis_name is None
-                else jax.lax.pmean(local_mean, axis_name))
+    if node_mask is not None:
+        nm = node_mask.astype(B.dtype)
+        b_sum = jnp.sum(B * nm[:, None], axis=0)
+        n_real = jnp.sum(nm)
+        if axis_name is not None:
+            b_sum = jax.lax.psum(b_sum, axis_name)
+            n_real = jax.lax.psum(n_real, axis_name)
+        beta_bar = b_sum / n_real
+    else:
+        local_mean = jnp.mean(B, axis=0)
+        beta_bar = (local_mean if axis_name is None
+                    else jax.lax.pmean(local_mean, axis_name))
 
     def node_grad(Xl, yl, ml):
         kern = losses.get_kernel(cfg.kernel)
@@ -484,8 +570,15 @@ def kkt_residual(prob: Problem, cfg, B: Array, lam,
             prob.X, prob.y)
     else:
         grads = jax.vmap(node_grad)(prob.X, prob.y, prob.mask)
-    g_local = jnp.mean(grads, axis=0)
-    g = g_local if axis_name is None else jax.lax.pmean(g_local, axis_name)
+    if node_mask is not None:
+        g_sum = jnp.sum(grads * nm[:, None], axis=0)
+        if axis_name is not None:
+            g_sum = jax.lax.psum(g_sum, axis_name)
+        g = g_sum / n_real
+    else:
+        g_local = jnp.mean(grads, axis=0)
+        g = (g_local if axis_name is None
+             else jax.lax.pmean(g_local, axis_name))
     g = g + cfg.lam0 * beta_bar
     p_dim = beta_bar.shape[-1]
     if lam_weights is None:
@@ -493,7 +586,10 @@ def kkt_residual(prob: Problem, cfg, B: Array, lam,
     else:
         lam_vec = lam * lam_weights
     stat = jnp.abs(beta_bar - soft_threshold(beta_bar - g, lam_vec))
-    cons_local = jnp.max(jnp.abs(B - beta_bar[None, :]))
+    dev = jnp.abs(B - beta_bar[None, :])
+    if node_mask is not None:
+        dev = dev * nm[:, None]
+    cons_local = jnp.max(dev)
     cons = (cons_local if axis_name is None
             else jax.lax.pmax(cons_local, axis_name))
     return jnp.maximum(jnp.max(stat), cons)

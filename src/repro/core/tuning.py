@@ -152,7 +152,10 @@ def select_lambda_path(X, y, W, cfg, lams: Optional[Sequence[float]] = None,
     ``select_lambda`` — table rows are (lambda, criterion, mean support
     size).  The full on-device ``PathResult`` is returned as a fourth
     element.  ``engine="mesh"`` routes the traversal through the 2-D
-    (node, lam) device-mesh engine (``decentral.decsvm_path_mesh``).
+    (node, lam) device-mesh engine (``decentral.decsvm_path_mesh``);
+    ``engine="chunked"`` runs the same mesh engine in its block schedule
+    (chunked node-megabatch layout: any m, m >> devices supported, and
+    ``W`` may be a ``graph.BlockTopology``).
 
     ``check_every`` (dense engine, warm mode only): evaluate the stop
     statistic every k-th round instead of every round.  The mesh engine
@@ -163,10 +166,14 @@ def select_lambda_path(X, y, W, cfg, lams: Optional[Sequence[float]] = None,
 
     if lams is None:
         lams = lambda_grid(np.asarray(X), np.asarray(y), num=num)
-    if engine == "mesh":
+    if engine in ("mesh", "chunked"):
         from repro.core import decentral  # local import: avoid cycle
+        if engine == "chunked":
+            schedule = "block"
+        else:
+            W = np.asarray(W)
         res = decentral.decsvm_path_mesh(
-            jnp.asarray(X), jnp.asarray(y), np.asarray(W), lams, cfg,
+            jnp.asarray(X), jnp.asarray(y), W, lams, cfg,
             mesh=mesh, schedule=schedule, mode=mode, tol=tol,
             lam_weights=lam_weights, stop_rule=stop_rule,
             criterion=criterion, cv_folds=cv_folds, cv_seed=cv_seed)
@@ -178,7 +185,8 @@ def select_lambda_path(X, y, W, cfg, lams: Optional[Sequence[float]] = None,
             criterion=criterion, cv_folds=cv_folds, cv_seed=cv_seed,
             check_every=check_every)
     else:
-        raise ValueError(f"engine {engine!r} not in ('dense', 'mesh')")
+        raise ValueError(
+            f"engine {engine!r} not in ('dense', 'mesh', 'chunked')")
     table = [(float(l), float(c), metrics.mean_support_size(np.asarray(B)))
              for l, c, B in zip(np.asarray(res.lams), np.asarray(res.criteria),
                                 np.asarray(res.path))]

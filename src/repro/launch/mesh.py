@@ -24,6 +24,27 @@ def make_node_lam_mesh(n_node: int, n_lam=None):
     return jax.make_mesh((n_node, n_lam), ("node", "lam"))
 
 
+def make_node_chunk_mesh(n_devices=None):
+    """1-D mesh with named axis ("node_chunk",) for the chunked
+    node-megabatch engines (``repro.core.decentral`` schedule="block"):
+    each device owns a contiguous chunk of ``ceil(m / n_devices)``
+    network nodes, so m is no longer capped by the device count."""
+    n = len(jax.devices()) if n_devices is None else n_devices
+    assert 1 <= n <= len(jax.devices()), (n, len(jax.devices()))
+    return jax.make_mesh((n,), ("node_chunk",))
+
+
+def make_chunk_lam_mesh(n_chunk: int, n_lam=None):
+    """2-D mesh with named axes ("node_chunk", "lam"): the chunked
+    analogue of ``make_node_lam_mesh`` for the mesh lambda-path engine
+    at m >> devices — node chunks shard over "node_chunk" (collectives
+    run only here), lambda grid cells over "lam"."""
+    n = len(jax.devices())
+    n_lam = (n // n_chunk) if n_lam is None else n_lam
+    assert n_chunk * n_lam <= n, (n_chunk, n_lam, n)
+    return jax.make_mesh((n_chunk, n_lam), ("node_chunk", "lam"))
+
+
 def make_host_mesh(model_axis: int = 1):
     """Small mesh over whatever devices exist (tests / CPU examples)."""
     n = len(jax.devices())

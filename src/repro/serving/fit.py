@@ -20,6 +20,12 @@ batch the same way (``path.decsvm_fit_many`` traces per-problem
 same-shaped requests therefore compiles once and then pays one program
 execution per *bucket*, not per request.
 
+Large-m requests (m above the device count) route to the chunked
+node-megabatch engine instead (``engine="auto"`` on ``FitRequest``;
+``decentral`` schedule="block"): one problem then spans every device via
+the node-chunk mesh, so such buckets execute per request while still
+sharing one cached compiled program across the bucket.
+
 The server shares the ``FifoEngine`` scheduling surface with the token
 engine (submit / step / run / pending / utilization) and adds an async
 mode: ``start()`` spawns a background worker that drains the queue as
@@ -51,13 +57,21 @@ class FitRequest:
     """One decentralized fit job.
 
     X: (m, n, p) node-partitioned design (include the intercept column);
-    y: (m, n) labels in {-1, +1}; W: (m, m) adjacency.
+    y: (m, n) labels in {-1, +1}; W: (m, m) adjacency — or a
+    ``graph.BlockTopology`` for large-m chunked fits (no dense O(m^2)
+    host matrix required).
     lams: explicit lambda grid, or None to build ``lambda_grid(num)``
     from this request's data at submit time (note: requests only share a
     bucket when their resolved grids coincide — pass an explicit common
     grid to batch across datasets).
     criterion: "bic" | "cv"; penalty: None (plain l1) or one of
     ``repro.core.penalties.PENALTIES`` for a one-step-LLA stage-2 re-fit.
+    engine: "auto" | "dense" | "chunked".  "auto" resolves at submit
+    time: "chunked" (the node-megabatch mesh engine, schedule="block")
+    when m exceeds the device count — such problems cannot run through
+    the dense problem-batched program at all — else "dense".  The
+    resolved engine is part of the bucket key, so dense and chunked
+    requests never co-batch.
     """
     rid: int
     X: np.ndarray
@@ -75,6 +89,7 @@ class FitRequest:
     tol: float = 1e-6
     stop_rule: str = "kkt"
     check_every: int = 4
+    engine: str = "auto"
 
 
 @dataclasses.dataclass
@@ -293,12 +308,34 @@ class DecsvmFitServer(FifoEngine):
     # -- scheduling internals ------------------------------------------------
 
     @staticmethod
+    def _w_shape(W) -> tuple:
+        """Adjacency shape without densifying: a ``BlockTopology`` keys by
+        its (m, m) logical shape, never materialized."""
+        if hasattr(W, "neighbors"):
+            return (W.m, W.m)
+        return np.asarray(W).shape
+
+    @staticmethod
+    def _resolve_engine(req: FitRequest) -> str:
+        """"auto" -> "chunked" iff the network is larger than the device
+        count (dense request-batching cannot shard such a problem);
+        explicit "dense"/"chunked" pass through."""
+        if req.engine != "auto":
+            if req.engine not in ("dense", "chunked"):
+                raise ValueError(f"engine {req.engine!r} not in "
+                                 f"('auto', 'dense', 'chunked')")
+            return req.engine
+        m = DecsvmFitServer._w_shape(req.W)[0]
+        return "chunked" if m > len(jax.devices()) else "dense"
+
+    @staticmethod
     def _bucket_key(req: FitRequest, lams: np.ndarray) -> tuple:
-        return (np.asarray(req.X).shape, np.asarray(req.W).shape, req.cfg,
+        return (np.asarray(req.X).shape,
+                DecsvmFitServer._w_shape(req.W), req.cfg,
                 tuple(float(l) for l in np.asarray(lams).ravel()),
                 req.mode, req.criterion, req.cv_folds, req.cv_seed,
                 req.penalty, req.threshold, req.tol, req.stop_rule,
-                req.check_every)
+                req.check_every, DecsvmFitServer._resolve_engine(req))
 
     def _pop_bucket_locked(self) -> List[Tuple[FitRequest, FitHandle,
                                                tuple, np.ndarray]]:
@@ -348,6 +385,8 @@ class DecsvmFitServer(FifoEngine):
 
     def _run_bucket(self, reqs: List[FitRequest],
                     lams: np.ndarray) -> List[FitResult]:
+        if self._resolve_engine(reqs[0]) == "chunked":
+            return self._run_bucket_chunked(reqs, lams)
         t0 = time.perf_counter()
         r0 = reqs[0]
         # stack host-side once; the jitted entry points move it on-device,
@@ -391,5 +430,66 @@ class DecsvmFitServer(FifoEngine):
                 lam_weights=(None if lam_weights is None else lam_weights[i]),
                 train_accuracy=metrics.margin_accuracy(margins[i], ys[i]),
                 consensus_gap=metrics.consensus_gap(best_B[i]),
+                wall_s=wall, batch_size=len(reqs)))
+        return out
+
+    def _run_bucket_chunked(self, reqs: List[FitRequest],
+                            lams: np.ndarray) -> List[FitResult]:
+        """Chunked (m > devices) bucket executor.  One problem already
+        occupies every device through the node-chunk mesh, so requests
+        resolve sequentially — but the whole bucket shares ONE compiled
+        program (same shapes/config/grid by bucket-key construction, so
+        the lru-cached chunked builders hit after the first request)."""
+        from repro.core import decentral   # local import: keep serving light
+
+        t0 = time.perf_counter()
+        r0 = reqs[0]
+        best_lams, best_Bs, tables = [], [], []
+        for req in reqs:
+            bl, bB, table, _ = tuning.select_lambda_path(
+                np.asarray(req.X, np.float32), np.asarray(req.y, np.float32),
+                req.W, r0.cfg, lams=lams, mode=r0.mode, tol=r0.tol,
+                criterion=r0.criterion, cv_folds=r0.cv_folds,
+                cv_seed=r0.cv_seed, stop_rule=r0.stop_rule,
+                engine="chunked")
+            best_lams.append(bl)
+            best_Bs.append(bB)
+            tables.append(table)
+        lam_weights = None
+        if r0.penalty is not None:
+            # One-step LLA stage 2: the chunked path engine traces lambda
+            # AND the weight vector, so the single-point re-fit grid below
+            # reuses one executable across the bucket and across lambdas.
+            from repro.core import penalties  # local import: keep serving light
+            wfun = penalties.PENALTIES[r0.penalty]
+            ws_list, refits = [], []
+            for req, bl, bB in zip(reqs, best_lams, best_Bs):
+                ws = wfun(jnp.asarray(bB).mean(axis=0), jnp.float32(bl))
+                path = decentral.decsvm_path_chunked(
+                    jnp.asarray(req.X, jnp.float32),
+                    jnp.asarray(req.y, jnp.float32), req.W,
+                    np.asarray([bl], np.float32), r0.cfg, lam_weights=ws)
+                refits.append(np.asarray(path[0]))
+                ws_list.append(np.asarray(ws))
+            best_Bs, lam_weights = refits, ws_list
+        if r0.threshold:
+            best_Bs = [np.asarray(hard_threshold_final(jnp.asarray(bB),
+                                                       jnp.float32(bl)))
+                       for bB, bl in zip(best_Bs, best_lams)]
+        wall = time.perf_counter() - t0
+        out = []
+        for i, req in enumerate(reqs):
+            Bi = np.asarray(best_Bs[i])
+            yi = np.asarray(req.y, np.float32)
+            margins = np.einsum("mnp,mp->mn", np.asarray(req.X, np.float32),
+                                Bi)
+            out.append(FitResult(
+                rid=req.rid, best_lam=float(best_lams[i]), B=Bi,
+                beta=Bi.mean(axis=0), table=tables[i],
+                criterion=req.criterion,
+                lam_weights=(None if lam_weights is None
+                             else lam_weights[i]),
+                train_accuracy=metrics.margin_accuracy(margins, yi),
+                consensus_gap=metrics.consensus_gap(Bi),
                 wall_s=wall, batch_size=len(reqs)))
         return out

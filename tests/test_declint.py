@@ -20,7 +20,7 @@ from tools.declint.core import check_exempt_list
 from tools.declint.rules import default_rules
 
 ROOT = Path(__file__).resolve().parent.parent
-AXES = {"pod", "data", "model", "node", "lam"}
+AXES = {"pod", "data", "model", "node", "node_chunk", "lam"}
 
 
 def _rules_of(violations):

@@ -2,9 +2,11 @@
 
 Mirrors the 13-driver parity matrix of `tests/test_solver.py::_drivers`
 (the contract: those recipes ARE the public surface), plus the bf16
-megakernel mode (the reason contract (b) exists), and the two
+megakernel mode (the reason contract (b) exists), the two
 batch-serving programs: `decsvm_path_select_many` — the fit-serving
-bucket executor behind `serving.fit` — and the mesh path engine.
+bucket executor behind `serving.fit` — and the mesh path engine, plus
+the chunked node-megabatch engine (`decsvm_fit_chunked` at m = 2x the
+forced device count, so the block-sparse neighbour-sum trace is real).
 
 Shapes are deliberately tiny (m=4, n=12, p=8, 2-point grids): tracing
 cost is what matters, not solution quality; `jax.make_jaxpr` never
@@ -68,6 +70,11 @@ def build_registry() -> Dict[str, Driver]:
     Xs = jnp.zeros((NB, M, N, P), jnp.float32)
     ys = jnp.ones((NB, M, N), jnp.float32)
     Ws = jnp.broadcast_to(Wj, (NB, M, M))
+    # chunked-engine shapes: 2x the device count the CLI forces, so each
+    # chunk really carries multiple nodes
+    W8n = np.asarray(ring(2 * M), np.float32)
+    X8 = jnp.zeros((2 * M, N, P), jnp.float32)
+    y8 = jnp.ones((2 * M, N), jnp.float32)
 
     recipes = {
         "dense": (lambda X, y: decsvm_fit(X, y, Wj, a), (X, y), False),
@@ -115,6 +122,11 @@ def build_registry() -> Dict[str, Driver]:
         "serving-bucket": (lambda Xs, ys: path_mod.decsvm_path_select_many(
             Xs, ys, Ws, lams, a, mode="warm", criterion="bic",
             check_every=2).best_B, (Xs, ys), False),
+        # chunked node-megabatch engine: m = 2x devices, so the trace
+        # carries the block-sparse neighbour sum (local dot + ppermute
+        # ring) and the ghost-padding guards
+        "chunked": (lambda X8, y8: decentral.decsvm_fit_chunked(
+            X8, y8, W8n, a), (X8, y8), False),
     }
     return {name: Driver(name, fn, args, bf16)
             for name, (fn, args, bf16) in recipes.items()}
