@@ -628,14 +628,17 @@ def build_mesh_path(m: int, p: int, C: int, cfg: ADMMConfig, mesh: Mesh,
             residual_fn = (solver.kkt_residual_fn(cfg, axis_name=nax,
                                                   node_mask=nmask)
                            if stop_rule == "kkt" else None)
-            # The block schedule's neighbour sum runs ppermute inside the
-            # while body, and XLA's CollectivePermute rendezvous spans
-            # the whole mesh — so under "block" the stop decision must be
-            # agreed across BOTH axes (uniform trip counts mesh-wide);
-            # converged lam columns keep refining until all columns stop.
-            # The sub-axis all_gather/psum of the dense schedules
-            # rendezvous per lam column, so those keep per-column stops.
-            stop_axes = (nax, "lam") if schedule == "block" else nax
+            # The block AND ring schedules' neighbour sums run ppermute
+            # inside the while body, and XLA's CollectivePermute
+            # rendezvous spans the whole mesh — so under either the stop
+            # decision must be agreed across BOTH axes (uniform trip
+            # counts mesh-wide); converged lam columns keep refining
+            # until all columns stop.  The sub-axis all_gather/psum of
+            # the gather schedule rendezvous per lam column, so that one
+            # keeps per-column stops.  (tools/meshcheck NONUNIFORM_STOP
+            # proves this choice at trace time; ring previously joined
+            # only the node axis — the PR 9 deadlock class.)
+            stop_axes = (nax, "lam") if schedule in ("block", "ring") else nax
             sdt = jnp.promote_types(Xl.dtype, jnp.float32)
 
             def fit_from(B_init, lam, rhoc, maskc, t0=None):

@@ -394,6 +394,74 @@ def test_lint_paths_applies_relaxed_tier_to_tests_dir():
     assert lint_paths([ROOT / "tests"]) == []
 
 
+# -- R10: collective loops need a reduced predicate --------------------------
+
+
+def test_r10_flags_unreduced_predicate_over_collective_loop():
+    # the PR 9 deadlock class at AST level: ppermute in the while body,
+    # continue flag never reduced over the axis
+    bad = """
+    def run(xl):
+        def cond(c):
+            return c[1]
+        def body(c):
+            xl, _ = c
+            xl = xl + jax.lax.ppermute(xl, "node", perm)
+            return (xl, jnp.max(xl) < 100.0)
+        return jax.lax.while_loop(cond, body, (xl, True))
+    """
+    got = lint(bad)
+    assert "R10" in _rules_of(got)
+    assert any("rendezvous" in v.message for v in got if v.rule == "R10")
+
+def test_r10_clean_when_flag_is_axis_reduced_in_scope():
+    # run_tol's shape: the reduction lives in a helper beside the loop
+    ok = """
+    def run(xl):
+        def _flag(x):
+            return jax.lax.pmax(jnp.max(x), "node") < 100.0
+        def cond(c):
+            return c[1]
+        def body(c):
+            xl, _ = c
+            xl = xl + jax.lax.ppermute(xl, "node", perm)
+            return (xl, _flag(xl))
+        return jax.lax.while_loop(cond, body, (xl, True))
+    """
+    assert [v for v in lint(ok) if v.rule == "R10"] == []
+
+def test_r10_sees_through_ifexp_body_selection():
+    # solver.run_tol passes `fused_body if use_fused else body`
+    bad = """
+    def run(xl, use_fused):
+        def cond(c):
+            return c[1]
+        def body(c):
+            return (jax.lax.psum(c[0], "node"), jnp.max(c[0]) < 1.0)
+        def fused_body(c):
+            return (jax.lax.psum(c[0], "node"), jnp.max(c[0]) < 1.0)
+        return jax.lax.while_loop(cond,
+                                  fused_body if use_fused else body,
+                                  (xl, True))
+    """
+    assert "R10" in _rules_of(lint(bad))
+
+def test_r10_flags_cond_branch_with_collective_and_waiver_suppresses():
+    bad = """
+    def pick(flag, xl):
+        return jax.lax.cond(flag, lambda v: jax.lax.psum(v, "node"),
+                            lambda v: v, xl)
+    """
+    assert "R10" in _rules_of(lint(bad))
+    waived = """
+    def pick(flag, xl):
+        # declint: disable=R10 flag is an all-reduce result upstream
+        return jax.lax.cond(flag, lambda v: jax.lax.psum(v, "node"),
+                            lambda v: v, xl)
+    """
+    assert [v for v in lint(waived) if v.rule == "R10"] == []
+
+
 # -- repo gate + CLI --------------------------------------------------------
 
 

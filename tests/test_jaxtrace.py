@@ -238,7 +238,7 @@ def test_repo_drivers_satisfy_all_contracts():
     assert kept == [], [f.format() for f in kept]
     assert errors == []
     assert report["roofline_gate"]["ok"]
-    assert len(report["drivers"]) >= 17
+    assert len(report["drivers"]) >= 20
 
 
 def test_cli_exits_zero_and_writes_artifact(tmp_path):

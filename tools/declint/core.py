@@ -160,6 +160,9 @@ class ModuleInfo:
             if arg.args:
                 return self._resolve_func_arg(arg.args[0], scope_call)
             return []
+        if isinstance(arg, ast.IfExp):  # e.g. fused_body if fused else body
+            return (self._resolve_func_arg(arg.body, scope_call)
+                    + self._resolve_func_arg(arg.orelse, scope_call))
         if isinstance(arg, ast.Name):
             return [f for f in self._funcs
                     if isinstance(f, (ast.FunctionDef, ast.AsyncFunctionDef))

@@ -1,4 +1,4 @@
-"""declint rules R1..R8 — the solver/kernel invariants PRs 4-6 left to
+"""declint rules R1..R10 — the solver/kernel invariants PRs 4-6 left to
 reviewer memory, now machine-checked.  Each rule's motivating PR/commit is
 documented in ``tools/declint/README.md``; each has a positive and a
 negative unit test in ``tests/test_declint.py``.
@@ -519,10 +519,90 @@ class R9InterpretLiteral(Rule):
         return out
 
 
+class R10CollectiveLoopPredicate(Rule):
+    """A data-dependent loop over collectives needs a reduced predicate.
+
+    When a ``lax.while_loop`` body (or a ``lax.cond``/``switch`` branch)
+    contains a *communication* collective, every member of the rendezvous
+    group must agree on the trip count / branch — a per-shard predicate
+    deadlocks the mesh (the PR 9 bug class: an unreduced continue flag
+    under the warm hand-off's CollectivePermute).  This rule fires when no
+    axis reduction (``pmax``/``pmin``/``psum``/``pmean``) appears anywhere
+    in the enclosing function (where the flag is typically computed, e.g.
+    ``solver.run_tol._flag``) or in the predicate function itself.  It is
+    the cheap AST-level early warning for what ``tools/meshcheck`` proves
+    at IR level (NONUNIFORM_STOP) — waive with
+    ``# declint: disable=R10 <reason>`` when the predicate is uniform by
+    construction.
+    """
+    id = "R10"
+    doc = "while_loop/cond over collectives needs an axis-reduced predicate"
+
+    _COMM = _COLLECTIVES - {"axis_index", "pvary"}
+    _REDUCE = {"pmax", "pmin", "psum", "pmean"}
+
+    def check(self, mod: ModuleInfo) -> Iterable[Violation]:
+        out: List[Violation] = []
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = mod.call_name(node)
+            if name == "while_loop" and len(node.args) >= 2:
+                pred_fns = mod._resolve_func_arg(node.args[0], node)
+                body_fns = mod._resolve_func_arg(node.args[1], node)
+            elif name in ("cond", "switch") and len(node.args) >= 2:
+                pred_fns = []
+                body_fns = [f for a in node.args[1:]
+                            for f in mod._resolve_func_arg(a, node)]
+            else:
+                continue
+            comm = self._first_comm(mod, body_fns)
+            if comm is None:
+                continue
+            # a reduction counts only where the *predicate* could come
+            # from: the cond function, or the enclosing scope OUTSIDE the
+            # loop body itself (run_tol's `_flag` helper) — the body's own
+            # collectives must not certify their own predicate
+            inside_body = {id(n) for f in body_fns for n in ast.walk(f)}
+            reduced = any(self._has_reduction(mod, f) for f in pred_fns)
+            enc = mod.enclosing_function(node)
+            if enc is not None and not reduced:
+                reduced = any(
+                    isinstance(sub, ast.Call)
+                    and mod.call_name(sub) in self._REDUCE
+                    and id(sub) not in inside_body
+                    for sub in ast.walk(enc))
+            if not reduced:
+                out.append(Violation(
+                    mod.path, node.lineno, self.id,
+                    f"{name} body contains collective {comm!r} but no axis "
+                    "reduction (pmax/psum/...) feeds its predicate in this "
+                    "scope — a per-shard trip count/branch desynchronizes "
+                    "the rendezvous (deadlock); reduce the flag over the "
+                    "collective's axes (meshcheck NONUNIFORM_STOP is the "
+                    "IR-level proof)"))
+        return out
+
+    def _first_comm(self, mod: ModuleInfo, fns) -> Optional[str]:
+        for fn in fns:
+            for sub in ast.walk(fn):
+                if isinstance(sub, ast.Call) \
+                        and mod.call_name(sub) in self._COMM:
+                    return mod.call_name(sub)
+        return None
+
+    @classmethod
+    def _has_reduction(cls, mod: ModuleInfo, scope: ast.AST) -> bool:
+        return any(isinstance(sub, ast.Call)
+                   and mod.call_name(sub) in cls._REDUCE
+                   for sub in ast.walk(scope))
+
+
 def default_rules(allowed_axes: Optional[Set[str]] = None) -> Sequence[Rule]:
     return (R1ProxHome(), R2KernelDotPrecision(), R3RhoBeforeCast(),
             R4TracerBranch(), R5KernelCollectives(), R6MeshAxes(allowed_axes),
-            R7HostMathInTraced(), R8CachedBuilder(), R9InterpretLiteral())
+            R7HostMathInTraced(), R8CachedBuilder(), R9InterpretLiteral(),
+            R10CollectiveLoopPredicate())
 
 
 def relaxed_rules() -> Sequence[Rule]:

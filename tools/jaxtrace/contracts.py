@@ -49,7 +49,7 @@ a full run, is itself an error (same W0 semantics as declint).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -124,15 +124,7 @@ def _loc(eqn, ctx: walk.Ctx) -> str:
 
 
 def _axis_names_of(eqn) -> List[str]:
-    names: List[str] = []
-    for key in ("axes", "axis_name", "axis_index_groups"):
-        v = eqn.params.get(key)
-        if key == "axis_index_groups" or v is None:
-            continue
-        for n in (v if isinstance(v, (tuple, list)) else (v,)):
-            if isinstance(n, str):
-                names.append(n)
-    return names
+    return list(walk.collective_axes(eqn))
 
 
 def _carry_vars(eqn) -> List[Any]:
@@ -256,12 +248,20 @@ def check_driver(name: str, closed, *, bf16: bool = False) -> List[Finding]:
     return out
 
 
-def apply_waivers(findings: List[Finding]) -> Tuple[List[Finding], set]:
-    """Drop waived findings; return (kept, matched waiver keys)."""
+def apply_waivers(findings: List[Finding],
+                  waivers: Optional[Dict[Tuple[str, str], str]] = None,
+                  ) -> Tuple[List[Finding], set]:
+    """Drop waived findings; return (kept, matched waiver keys).
+
+    `waivers` defaults to this module's ledger; tools/meshcheck passes
+    its own ledger through the same machinery so the W0 semantics
+    (reasoned, non-stale waivers only) stay identical across analyzers."""
+    if waivers is None:
+        waivers = WAIVERS
     kept, matched = [], set()
     for f in findings:
         hit = None
-        for (contract, substr), _reason in WAIVERS.items():
+        for (contract, substr), _reason in waivers.items():
             if contract == f.contract and (substr in f.message
                                            or substr in f.where):
                 hit = (contract, substr)
@@ -273,10 +273,14 @@ def apply_waivers(findings: List[Finding]) -> Tuple[List[Finding], set]:
     return kept, matched
 
 
-def audit_waivers(matched: set) -> List[str]:
+def audit_waivers(matched: set,
+                  waivers: Optional[Dict[Tuple[str, str], str]] = None,
+                  ) -> List[str]:
     """W0 semantics: reasonless or stale waivers are errors."""
+    if waivers is None:
+        waivers = WAIVERS
     errors = []
-    for key, reason in WAIVERS.items():
+    for key, reason in waivers.items():
         if not str(reason).strip():
             errors.append(f"W0: waiver {key} has no reason")
         if key not in matched:

@@ -6,21 +6,26 @@ megakernel mode (the reason contract (b) exists), the two
 batch-serving programs: `decsvm_path_select_many` — the fit-serving
 bucket executor behind `serving.fit` — and the mesh path engine, plus
 the chunked node-megabatch engine (`decsvm_fit_chunked` at m = 2x the
-forced device count, so the block-sparse neighbour-sum trace is real).
+forced device count, so the block-sparse neighbour-sum trace is real),
+the Metropolis gossip scan (`gossip.gossip_average`), and the chunked
+warm path on the (node_chunk, lam) mesh (`mesh-2d-block`, odd m — the
+ghost-padding + two-axis-stop trace).
 
-Shapes are deliberately tiny (m=4, n=12, p=8, 2-point grids): tracing
+Shapes are deliberately tiny (m=8, n=12, p=8, 2-point grids): tracing
 cost is what matters, not solution quality; `jax.make_jaxpr` never
 executes a round.  Sharded/mesh drivers trace against whatever CPU
 devices exist (a 1-device mesh still emits `shard_map` + collective
-equations, which is what the contracts inspect); the CLI forces 4 host
-devices before importing jax so CI traces a real multi-device binding.
+equations, which is what the contracts inspect); the CLIs force host
+devices before importing jax so CI traces a real multi-device binding —
+4 for `tools.jaxtrace`, 8 for `tools.meshcheck` — so m must divide
+evenly by both (m=8 does; the sharded engines assert m % ndev == 0).
 """
 from __future__ import annotations
 
 import functools
 from typing import Callable, Dict, NamedTuple, Tuple
 
-M, N, P = 4, 12, 8
+M, N, P = 8, 12, 8
 L = 2          # lambda grid points
 NB = 2         # problems per serving bucket
 ITERS = 6
@@ -46,7 +51,7 @@ def build_registry() -> Dict[str, Driver]:
     import jax.numpy as jnp
     import numpy as np
 
-    from repro.core import decentral
+    from repro.core import decentral, gossip
     from repro.core import path as path_mod
     from repro.core.admm import ADMMConfig, decsvm_fit
     from repro.core.admm_adaptive import decsvm_fit_tol, decsvm_fit_uneven
@@ -75,6 +80,14 @@ def build_registry() -> Dict[str, Driver]:
     W8n = np.asarray(ring(2 * M), np.float32)
     X8 = jnp.zeros((2 * M, N, P), jnp.float32)
     y8 = jnp.ones((2 * M, N), jnp.float32)
+    # gossip operands: per-node vectors to average over the ring
+    vals = jnp.ones((M, 3), jnp.float32)
+    # chunked-inside-lambda mesh shapes: an ODD node count, so the tail
+    # chunk really pads with ghost rows on any multi-device mesh
+    M_BLK = 2 * M + 1
+    Wblk = np.asarray(ring(M_BLK), np.float32)
+    Xblk = jnp.zeros((M_BLK, N, P), jnp.float32)
+    yblk = jnp.ones((M_BLK, N), jnp.float32)
 
     recipes = {
         "dense": (lambda X, y: decsvm_fit(X, y, Wj, a), (X, y), False),
@@ -127,6 +140,17 @@ def build_registry() -> Dict[str, Driver]:
         # ring) and the ghost-padding guards
         "chunked": (lambda X8, y8: decentral.decsvm_fit_chunked(
             X8, y8, W8n, a), (X8, y8), False),
+        # lax.scan Metropolis gossip — the decentralized averaging
+        # primitive the async-topology work will build on
+        "gossip": (lambda v: gossip.gossip_average(v, Wj, rounds=ITERS),
+                   (vals,), False),
+        # chunked node-megabatch INSIDE the lambda mesh: warm mode on the
+        # (node_chunk, lam) mesh at odd m, so the trace carries the
+        # block-sparse delta-shift ppermute chain, ghost padding, AND the
+        # two-axis pmax-agreed stop (the PR 9 deadlock surface)
+        "mesh-2d-block": (lambda Xb, yb: decentral.decsvm_path_mesh(
+            Xb, yb, Wblk, lams_host, pz, schedule="block", mode="warm",
+            check_every=2).path, (Xblk, yblk), False),
     }
     return {name: Driver(name, fn, args, bf16)
             for name, (fn, args, bf16) in recipes.items()}

@@ -47,6 +47,11 @@ class Ctx:
     path: Tuple[str, ...] = ()
     inside_pallas: bool = False
     axis_names: frozenset = frozenset()
+    # (axis name, size) pairs for every mesh axis in scope, harvested from
+    # enclosing shard_map meshes — tools/meshcheck validates ppermute
+    # permutations against these sizes (a perm index >= the axis size is
+    # the wrong-axis-confusion bug class).
+    axis_sizes: Tuple[Tuple[str, int], ...] = ()
     in_loop: bool = False
     loop_scale: int = 1
     dynamic_loops: int = 0
@@ -54,6 +59,12 @@ class Ctx:
 
     def child(self, **kw) -> "Ctx":
         return dataclasses.replace(self, **kw)
+
+    def axis_size(self, name: str):
+        for n, s in self.axis_sizes:
+            if n == name:
+                return s
+        return None
 
 
 def _open(j):
@@ -106,6 +117,7 @@ def _child_ctx(eqn, key: str, sub_open, ctx: Ctx) -> Ctx:
         names = tuple(getattr(mesh, "axis_names", ()) or ())
         kw["axis_names"] = ctx.axis_names | frozenset(
             n for n in names if isinstance(n, str))
+        kw["axis_sizes"] = mesh_axis_sizes(mesh, ctx.axis_sizes)
     if prim == "scan":
         kw["in_loop"] = True
         kw["loop_scale"] = ctx.loop_scale * int(eqn.params.get("length", 1))
@@ -123,6 +135,39 @@ def _child_ctx(eqn, key: str, sub_open, ctx: Ctx) -> Ctx:
     kw["const_vars"] = (frozenset(carried)
                         | _const_section(prim, key, eqn, sub_open))
     return ctx.child(**kw)
+
+
+def mesh_axis_sizes(mesh, outer: Tuple[Tuple[str, int], ...] = ()
+                    ) -> Tuple[Tuple[str, int], ...]:
+    """Merge a shard_map mesh's (axis, size) pairs over `outer` scope.
+
+    `mesh.shape` is an ordered name->size mapping on the jax we pin;
+    inner bindings shadow outer ones of the same name."""
+    try:
+        items = tuple((str(n), int(s))
+                      for n, s in dict(getattr(mesh, "shape", {})).items())
+    except Exception:
+        items = ()
+    inner = {n for n, _ in items}
+    return tuple((n, s) for n, s in outer if n not in inner) + items
+
+
+def collective_axes(eqn) -> Tuple[str, ...]:
+    """Mesh axis names a collective equation is bound to, in param order.
+
+    Reads both the `axes` param (psum/pmax/pmin, which may mix in
+    positional int axes — filtered out) and the `axis_name` param
+    (ppermute/all_gather/axis_index, scalar or tuple).  Shared between
+    jaxtrace's AXIS_NAME contract and tools/meshcheck."""
+    names = []
+    for key in ("axes", "axis_name"):
+        v = eqn.params.get(key)
+        if v is None:
+            continue
+        for n in (v if isinstance(v, (tuple, list)) else (v,)):
+            if isinstance(n, str):
+                names.append(n)
+    return tuple(names)
 
 
 def iter_jaxprs(closed) -> Iterator[Tuple[Any, Ctx]]:

@@ -1,0 +1,117 @@
+"""meshcheck — SPMD collective-uniformity & deadlock analysis.
+
+`tools/declint` lints the source, `tools/jaxtrace` checks dtype/placement
+contracts on the traced IR; this package proves the *communication*
+contracts on the same IR: every `while_loop`/`cond` predicate that
+dominates a collective is mesh-uniform along that collective's
+rendezvous axes (the PR 9 deadlock class), every `ppermute` permutation
+is injective and in-range for its axis, every collective axis is bound
+at its mesh depth, and `cond` branches issue identical collective
+sequences.  Each driver's ordered collective schedule (op x axes x
+operand shapes) is fingerprinted into the committed
+`meshcheck_contracts.json`; the CLI fails on drift so communication-
+pattern changes are always deliberate.
+
+Shares jaxtrace's driver registry (`tools.jaxtrace.drivers`), walker
+(`tools.jaxtrace.walk`), and waiver/W0 machinery.  Run
+`python -m tools.meshcheck` (the CI lint job does; it pins cpu + 8
+forced host devices); see docs/collective_contracts.md.
+"""
+from __future__ import annotations
+
+import pathlib
+from typing import Dict, List, Optional, Tuple
+
+from tools.jaxtrace import contracts as jt_contracts
+from tools.jaxtrace import drivers as jt_drivers
+from tools.jaxtrace.contracts import Finding  # noqa: F401
+from tools.meshcheck.analysis import (  # noqa: F401
+    WAIVERS, DriverAnalysis, analyze_driver)
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[2]
+CONTRACTS_NAME = "meshcheck_contracts.json"
+
+
+def run_report(names: Optional[List[str]] = None,
+               ) -> Tuple[Dict, List[Finding], List[str]]:
+    """Trace every registered driver and run the uniformity analysis.
+
+    Returns (report dict, kept findings, W0 errors).  The report's
+    per-driver fingerprints depend on the device count (permutation
+    lists, chunk shapes), which the report records; drift comparisons
+    must run at the committed table's device count — the CLI pins 8.
+    """
+    import jax
+
+    reg = jt_drivers.build_registry()
+    if names:
+        unknown = sorted(set(names) - set(reg))
+        if unknown:
+            raise KeyError(f"unknown driver(s) {unknown}; "
+                           f"registry has {sorted(reg)}")
+        reg = {k: v for k, v in reg.items() if k in names}
+    report: Dict = {
+        "jax_version": jax.__version__,
+        "device_count": jax.device_count(),
+        "shapes": {"m": jt_drivers.M, "n": jt_drivers.N, "p": jt_drivers.P,
+                   "grid": jt_drivers.L, "bucket": jt_drivers.NB,
+                   "iters": jt_drivers.ITERS},
+        "drivers": {},
+    }
+    all_findings: List[Finding] = []
+    for name, drv in reg.items():
+        ana = analyze_driver(name, jt_drivers.trace(drv))
+        all_findings.extend(ana.findings)
+        report["drivers"][name] = {
+            "collectives": len(ana.fingerprint),
+            "while_loops": ana.n_while,
+            "cond_eqns": ana.n_cond,
+            "vars_varying": ana.vars_varying,
+            "vars_uniform": ana.vars_uniform,
+            "findings": [f.format() for f in ana.findings],
+            "fingerprint": ana.fingerprint,
+        }
+    kept, matched = jt_contracts.apply_waivers(all_findings, WAIVERS)
+    errors = jt_contracts.audit_waivers(matched, WAIVERS)
+    report["findings_total"] = len(all_findings)
+    report["findings_kept"] = len(kept)
+    return report, kept, errors
+
+
+def diff_fingerprints(committed: Dict, fresh: Dict) -> List[str]:
+    """Drift gate: compare a committed contract table against a fresh
+    run.  Any difference in a driver's collective schedule (or in the
+    driver set) is an error — regenerating the table with
+    `python -m tools.meshcheck --update` is the deliberate opt-in."""
+    if committed.get("device_count") != fresh.get("device_count"):
+        return [
+            "FINGERPRINT_DRIFT: committed table was generated at "
+            f"{committed.get('device_count')} devices but this run has "
+            f"{fresh.get('device_count')}; run the CLI unmodified (it "
+            "pins 8 forced host devices) so schedules are comparable"]
+    cd = committed.get("drivers", {})
+    fd = fresh.get("drivers", {})
+    errors = []
+    for name in sorted(set(cd) | set(fd)):
+        if name not in fd:
+            errors.append(f"FINGERPRINT_DRIFT: driver {name!r} is in the "
+                          "committed table but no longer registered; "
+                          "regenerate with --update")
+            continue
+        if name not in cd:
+            errors.append(f"FINGERPRINT_DRIFT: driver {name!r} is newly "
+                          "registered; regenerate with --update")
+            continue
+        old = cd[name].get("fingerprint", [])
+        new = fd[name]["fingerprint"]
+        if old != new:
+            k = next((i for i, (a, b) in enumerate(zip(old, new))
+                      if a != b), min(len(old), len(new)))
+            o = old[k] if k < len(old) else "<end>"
+            n = new[k] if k < len(new) else "<end>"
+            errors.append(
+                f"FINGERPRINT_DRIFT: {name}: collective schedule changed "
+                f"(committed {len(old)} ops, traced {len(new)}; first "
+                f"divergence at op {k}: {o} -> {n}); if deliberate, "
+                "regenerate with `python -m tools.meshcheck --update`")
+    return errors

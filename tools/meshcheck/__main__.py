@@ -1,0 +1,90 @@
+"""CLI: `python -m tools.meshcheck [--update] [--out FILE]`.
+
+Exit 0 iff the uniformity/deadlock analysis finds nothing over every
+registered driver AND every driver's collective-schedule fingerprint
+matches the committed `meshcheck_contracts.json` (drift gate).  With
+`--update` the gate is skipped and the table is regenerated — the
+deliberate way to land a communication-pattern change.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+# Environment must be pinned BEFORE jax is imported: CPU platform, and 8
+# forced host devices — one more halving than jaxtrace's 4 so the 2-D
+# meshes bind as 4x2 and the chunked engines carry 2 nodes per chunk.
+# Fingerprints (permutation lists, chunk shapes) depend on this count,
+# so the committed table records it and the gate refuses to compare
+# across counts.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=8").strip()
+
+import argparse
+import json
+import pathlib
+
+_ROOT = pathlib.Path(__file__).resolve().parents[2]
+try:  # repo checkout without `pip install -e .`: fall back to src/
+    import repro  # noqa: F401
+except ImportError:
+    sys.path.insert(0, str(_ROOT / "src"))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.meshcheck",
+        description="SPMD collective-uniformity & deadlock analysis "
+                    "over every driver's jaxpr")
+    ap.add_argument("--out", default="meshcheck_contracts.json",
+                    help="contract table JSON artifact path (also the "
+                    "committed baseline the drift gate reads)")
+    ap.add_argument("--update", action="store_true",
+                    help="skip the drift gate and regenerate the table")
+    ap.add_argument("--driver", action="append", default=None,
+                    help="restrict to named driver(s); default: all "
+                    "(drift gate only runs on full-registry runs)")
+    args = ap.parse_args(argv)
+
+    from tools import meshcheck
+
+    report, findings, errors = meshcheck.run_report(names=args.driver)
+
+    print(f"meshcheck: {len(report['drivers'])} drivers analyzed "
+          f"(jax {report['jax_version']}, "
+          f"{report['device_count']} devices)")
+    cols = ("collectives", "while_loops", "cond_eqns", "vars_varying",
+            "vars_uniform")
+    print(f"{'driver':<22}" + "".join(f"{c:>14}" for c in cols))
+    for name, row in report["drivers"].items():
+        print(f"{name:<22}" + "".join(f"{row[c]:>14}" for c in cols))
+
+    out = pathlib.Path(args.out)
+    if not args.update and args.driver is None:
+        if out.exists():
+            committed = json.loads(out.read_text())
+            errors += meshcheck.diff_fingerprints(committed, report)
+        else:
+            errors.append(
+                f"FINGERPRINT_DRIFT: no committed {out} — generate one "
+                "with `python -m tools.meshcheck --update` and commit it")
+    out.write_text(json.dumps(report, indent=2) + "\n")
+    print(f"contract table written to {out}")
+
+    for f in findings:
+        print(f"CONTRACT VIOLATION: {f.format()}", file=sys.stderr)
+    for e in errors:
+        print(f"ERROR: {e}", file=sys.stderr)
+    if findings or errors:
+        print(f"meshcheck: {len(findings)} contract violation(s), "
+              f"{len(errors)} gate error(s)", file=sys.stderr)
+        return 1
+    print("meshcheck: all collective contracts hold")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
